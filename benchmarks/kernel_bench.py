@@ -1,0 +1,68 @@
+"""Kernel micro-benchmarks (CPU): the XLA reference paths that back the
+dry-run roofline, timed per call; Pallas variants are validated for
+correctness in tests (interpret mode — timing them on CPU is meaningless,
+the TPU target is what the BlockSpecs are tiled for)."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, reps=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.time() - t0) / reps * 1e6
+
+
+def run() -> List[Dict]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # ssd: chunked (production) vs naive recurrence
+    from repro.kernels.ssd import ref as ssd_ref
+    B, S, H, G, P, N = 1, 1024, 8, 1, 64, 128
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.uniform(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, G, N), jnp.float32)
+    Cm = jax.random.normal(ks[4], (B, S, G, N), jnp.float32)
+    naive = jax.jit(lambda *a: ssd_ref.ssd_naive(*a))
+    chunked = jax.jit(lambda *a: ssd_ref.ssd_chunked(*a, chunk=256))
+    us_n = _time(naive, x, dt, A, Bm, Cm)
+    us_c = _time(chunked, x, dt, A, Bm, Cm)
+    rows.append({"name": "kernel.ssd_naive_S1024", "us_per_call": round(us_n),
+                 "derived": "sequential recurrence oracle"})
+    rows.append({"name": "kernel.ssd_chunked_S1024",
+                 "us_per_call": round(us_c),
+                 "derived": (f"{us_n/us_c:.1f}x vs naive on CPU (chunked form trades "
+                             f"flops for MXU-shaped matmuls; wins on TPU)")})
+
+    # flash attention ref vs naive full materialization
+    from repro.kernels.flash_attention import ref as fa_ref
+    B, S, Hh, KV, hd = 1, 1024, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, Hh, S, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, KV, S, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, KV, S, hd), jnp.float32)
+    att = jax.jit(lambda q, k, v: fa_ref.attention_ref(q, k, v, scale=0.125))
+    rows.append({"name": "kernel.attention_ref_S1024",
+                 "us_per_call": round(_time(att, q, k, v)),
+                 "derived": "XLA oracle; Pallas flash kernel is TPU-target"})
+
+    # fused rmsnorm vs unfused
+    from repro.kernels.fused_rmsnorm import ref as rn_ref
+    x = jax.random.normal(key, (4096, 1024), jnp.float32)
+    w = jnp.ones((1024,)) * 0.1
+    rn = jax.jit(lambda x, w: rn_ref.rmsnorm_ref(x, w))
+    rows.append({"name": "kernel.rmsnorm_4096x1024",
+                 "us_per_call": round(_time(rn, x, w)),
+                 "derived": "bandwidth-bound norm"})
+    return rows

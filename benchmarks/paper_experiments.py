@@ -1,0 +1,227 @@
+"""Paper-experiment benchmarks — one function per figure/table of
+Merzky et al. SC-W'25, each returning rows with our measurement next to the
+paper's reported value."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core import calibration as CAL
+from repro.core.agent import Agent, SimEngine
+from repro.core.analytics import compute_metrics
+from repro.core.impeccable import run_impeccable
+from repro.core.task import TaskDescription
+
+
+def _run(backends, n_nodes, descs, seed=0):
+    t0 = time.time()
+    eng = SimEngine(seed=seed)
+    agent = Agent(eng, n_nodes, backends)
+    agent.start()
+    agent.submit(descs)
+    agent.run_until_complete()
+    m = compute_metrics(list(agent.tasks.values()), agent.total_cores)
+    return m, (time.time() - t0) * 1e6
+
+
+def _null(n, kind="executable"):
+    return [TaskDescription(cores=1, duration=0.0, kind=kind)
+            for _ in range(n)]
+
+
+def _dummy(n, dur=180.0, kind="executable"):
+    return [TaskDescription(cores=1, duration=dur, kind=kind)
+            for _ in range(n)]
+
+
+# ------------------------------------------------------------ Fig 4 (srun util)
+def bench_fig4_srun_utilization() -> List[Dict]:
+    m, us = _run({"srun": {}}, 4, _dummy(CAL.tasks_for_nodes(4)))
+    return [{
+        "name": "fig4.srun_utilization_4n",
+        "us_per_call": round(us),
+        "derived": (f"util={m.utilization:.3f} (paper 0.50); "
+                    f"conc_peak={m.concurrency_peak} (paper 112)"),
+    }]
+
+
+# ---------------------------------------------------- Fig 5 (backend throughput)
+def bench_fig5_backend_throughput() -> List[Dict]:
+    rows = []
+    paper = {("srun", 1): 152, ("srun", 4): 61,
+             ("flux", 1): 28, ("flux", 1024): 300,
+             ("dragon", 4): 343, ("dragon", 64): 204}
+    cases = [("srun", {"srun": {}}, (1, 4, 16)),
+             ("flux", {"flux": {}}, (1, 4, 64, 1024)),
+             ("dragon", {"dragon": {}}, (4, 16, 64))]
+    for name, backends, node_counts in cases:
+        for n in node_counts:
+            m, us = _run(backends, n, _null(min(20000, 4000 + 16 * n)))
+            ref = paper.get((name, n))
+            rows.append({
+                "name": f"fig5.{name}_throughput_{n}n",
+                "us_per_call": round(us),
+                "derived": (f"avg={m.throughput_avg:.1f} t/s"
+                            + (f" (paper ~{ref})" if ref else "")),
+            })
+    # flux+dragon hybrid (Fig 5d): mixed modality at 64 nodes
+    descs = _null(10000, "executable") + _null(10000, "function")
+    m, us = _run({"flux": {"partitions": 8, "nodes": 32},
+                  "dragon": {"partitions": 8, "nodes": 32}}, 64, descs,
+                 seed=4)
+    rows.append({
+        "name": "fig5.flux+dragon_throughput_64n",
+        "us_per_call": round(us),
+        "derived": (f"avg={m.throughput_avg:.0f} peak={m.throughput_peak:.0f}"
+                    f" t/s (paper peak 1547)"),
+    })
+    return rows
+
+
+# ------------------------------------------------------------ Fig 6 (flux_n)
+def bench_fig6_flux_partitions() -> List[Dict]:
+    rows = []
+    paper = {(4, 1): 56, (4, 4): 98, (16, 16): 195, (1024, 1): 161,
+             (1024, 16): 233}
+    for nodes, insts in [(4, 1), (4, 4), (16, 16), (64, 1), (64, 16),
+                         (1024, 1), (1024, 16)]:
+        m, us = _run({"flux": {"partitions": insts}}, nodes,
+                     _null(min(20000, 4000 + 16 * nodes)))
+        ref = paper.get((nodes, insts))
+        rows.append({
+            "name": f"fig6.flux_{nodes}n_{insts}inst",
+            "us_per_call": round(us),
+            "derived": (f"avg={m.throughput_avg:.1f} t/s"
+                        + (f" (paper ~{ref})" if ref else "")),
+        })
+    return rows
+
+
+# ------------------------------------------------- Fig 7 (startup overheads)
+def bench_fig7_startup_overhead() -> List[Dict]:
+    rows = []
+    for backends, label, paper_s in [
+            ({"flux": {"partitions": 4}}, "flux_4inst", 20.0),
+            ({"dragon": {"partitions": 2}}, "dragon_2inst", 9.0),
+            ({"flux": {"partitions": 8}, "dragon": {"partitions": 8}},
+             "flux+dragon_8+8", 20.0)]:
+        t0 = time.time()
+        eng = SimEngine(seed=0)
+        agent = Agent(eng, 16, backends)
+        agent.start()
+        ready = max(ex.ready_at for ex in agent.backends.values())
+        rows.append({
+            "name": f"fig7.startup_{label}",
+            "us_per_call": round((time.time() - t0) * 1e6),
+            "derived": (f"overhead={ready:.1f}s concurrent "
+                        f"(paper ~{paper_s:.0f}s/instance, not additive)"),
+        })
+    return rows
+
+
+# --------------------------------------------- Fig 8 / §4.2 (IMPECCABLE)
+def bench_fig8_impeccable() -> List[Dict]:
+    rows = []
+    res = {}
+    for backend in ("srun", "flux"):
+        for nodes in (256, 1024):
+            t0 = time.time()
+            agent, camp = run_impeccable(backend, nodes, iterations=2,
+                                         seed=3)
+            m = compute_metrics(camp.all_tasks(), agent.total_cores)
+            res[(backend, nodes)] = m
+            rows.append({
+                "name": f"fig8.impeccable_{backend}_{nodes}n",
+                "us_per_call": round((time.time() - t0) * 1e6),
+                "derived": (f"tasks={m.n_tasks} makespan={m.makespan:.0f}s "
+                            f"util={m.utilization:.2f} "
+                            f"thr={m.throughput_avg:.2f} t/s"),
+            })
+    for nodes in (256, 1024):
+        red = 1 - res[("flux", nodes)].makespan / res[("srun", nodes)].makespan
+        thr = (res[("flux", nodes)].throughput_avg
+               / max(1e-9, res[("srun", nodes)].throughput_avg))
+        rows.append({
+            "name": f"fig8.flux_vs_srun_{nodes}n",
+            "us_per_call": 0,
+            "derived": (f"makespan_reduction={red:.0%} (paper 30-60%); "
+                        f"throughput_ratio={thr:.1f}x"),
+        })
+    return rows
+
+
+# ------------------------------------- beyond-paper: partitioned dragon etc.
+def bench_beyond_paper_runtime() -> List[Dict]:
+    """Paper's future work, implemented: partitioned Dragon removes the
+    centralized ceiling; speculation bounds straggler damage."""
+    rows = []
+    for insts in (1, 8):
+        m, us = _run({"dragon": {"partitions": insts}}, 64,
+                     _null(12000, "function"), seed=2)
+        rows.append({
+            "name": f"beyond.dragon_64n_{insts}inst",
+            "us_per_call": round(us),
+            "derived": f"avg={m.throughput_avg:.0f} t/s"
+                       + (" (paper: centralized declines at 64n; "
+                          "partitioning is listed future work)"
+                          if insts > 1 else ""),
+        })
+    # straggler speculation
+    import random as _r
+    for spec in (False, True):
+        eng = SimEngine(seed=5)
+        rng = _r.Random(5)
+        eng.duration_fn = lambda t: (t.description.duration *
+                                     (20.0 if rng.random() < 0.01 else 1.0))
+        agent = Agent(eng, 16, {"flux": {"partitions": 4}},
+                      speculation=spec, speculation_factor=2.0)
+        agent.start()
+        agent.submit(_dummy(2000, dur=60.0))
+        agent.run_until_complete()
+        m = compute_metrics(list(agent.tasks.values()), agent.total_cores)
+        rows.append({
+            "name": f"beyond.stragglers_speculation_{'on' if spec else 'off'}",
+            "us_per_call": 0,
+            "derived": f"makespan={m.makespan:.0f}s (1% tasks 20x slow)",
+        })
+    return rows
+
+
+def bench_beyond_adaptive_routing() -> List[Dict]:
+    """Dynamic backend selection (paper §6 future work): skewed sustained
+    load; adaptive offloads the saturated backend's overflow."""
+    from repro.core.agent import AdaptiveRoutingPolicy
+    rows = []
+    for label, policy in (("static", None),
+                          ("adaptive", AdaptiveRoutingPolicy())):
+        t0 = time.time()
+        eng = SimEngine(seed=7)
+        agent = Agent(eng, 32, {"flux": {"partitions": 4, "nodes": 16},
+                                "dragon": {"partitions": 4, "nodes": 16}},
+                      policy=policy)
+        agent.start()
+        agent.submit([TaskDescription(
+            cores=1, duration=60.0,
+            kind="function" if i % 10 else "executable")
+            for i in range(6000)])
+        agent.run_until_complete()
+        m = compute_metrics(list(agent.tasks.values()), agent.total_cores)
+        rows.append({
+            "name": f"beyond.routing_{label}",
+            "us_per_call": round((time.time() - t0) * 1e6),
+            "derived": (f"makespan={m.makespan:.0f}s util={m.utilization:.2f}"
+                        f" (90%-function skewed load)"),
+        })
+    return rows
+
+
+def run() -> List[Dict]:
+    rows = []
+    rows += bench_fig4_srun_utilization()
+    rows += bench_fig5_backend_throughput()
+    rows += bench_fig6_flux_partitions()
+    rows += bench_fig7_startup_overhead()
+    rows += bench_fig8_impeccable()
+    rows += bench_beyond_paper_runtime()
+    rows += bench_beyond_adaptive_routing()
+    return rows

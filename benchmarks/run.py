@@ -1,0 +1,42 @@
+"""Benchmark harness: one module per paper table/figure plus the roofline
+table. Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated module filter "
+                         "(paper,roofline,kernel)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set()
+
+    suites = []
+    if not only or "paper" in only:
+        from benchmarks import paper_experiments
+        suites.append(("paper", paper_experiments.run))
+    if not only or "kernel" in only:
+        from benchmarks import kernel_bench
+        suites.append(("kernel", kernel_bench.run))
+    if not only or "roofline" in only:
+        from benchmarks import roofline_table
+        suites.append(("roofline", roofline_table.run))
+
+    print("name,us_per_call,derived")
+    for label, fn in suites:
+        try:
+            rows = fn()
+        except Exception as e:                                # noqa: BLE001
+            print(f"{label}.ERROR,0,\"{type(e).__name__}: {e}\"",
+                  file=sys.stdout)
+            raise
+        for r in rows:
+            derived = str(r["derived"]).replace('"', "'")
+            print(f"{r['name']},{r['us_per_call']},\"{derived}\"", flush=True)
+
+
+if __name__ == "__main__":
+    main()

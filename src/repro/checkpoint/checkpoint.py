@@ -1,0 +1,144 @@
+"""Checkpointing: npz shard files + JSON manifest, async save thread,
+atomic step directories, retention policy, and **elastic restore** — a
+checkpoint saved under one mesh/sharding can be restored onto a different
+mesh (parameters are saved as full logical arrays and re-sharded at load),
+which is what lets training resume after losing or gaining data-parallel
+replicas (fault tolerance / elastic scaling at the training layer).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state: Dict[str, Any],
+             extra_meta: Optional[Dict[str, Any]] = None):
+        """``state``: pytrees (params/opt_state) + small json-ables under
+        '_meta' keys. Writes <dir>/step_<n>.tmp then renames (atomic)."""
+        host_state = jax.tree.map(
+            lambda x: np.asarray(x) if hasattr(x, "dtype") else x, state)
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_state, extra_meta),
+                daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host_state, extra_meta)
+
+    def _write(self, step: int, state, extra_meta):
+        tmp = os.path.join(self.directory, f"step_{step:08d}.tmp")
+        final = os.path.join(self.directory, f"step_{step:08d}")
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "time": time.time(),
+                    "meta": extra_meta or {}, "arrays": {}}
+        arrays = {}
+        for key, leaf in _flatten(state):
+            if hasattr(leaf, "dtype"):
+                arrays[key] = np.asarray(leaf)
+                manifest["arrays"][key] = {
+                    "shape": list(arrays[key].shape),
+                    "dtype": str(arrays[key].dtype)}
+            else:
+                manifest["meta"][key] = leaf
+        # bf16 isn't npz-native: view as uint16 and record the real dtype
+        packed = {}
+        for k, a in arrays.items():
+            if a.dtype == jax.numpy.bfloat16:
+                manifest["arrays"][k]["dtype"] = "bfloat16"
+                a = a.view(np.uint16)
+            packed[k.replace("/", "__")] = a
+        np.savez(os.path.join(tmp, "arrays.npz"), **packed)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def wait(self):
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None,
+                template: Optional[Any] = None,
+                shardings: Optional[Any] = None) -> Dict[str, Any]:
+        """Returns {'step', 'meta', 'get(key)'} or, with ``template``, the
+        re-built pytree (re-sharded onto ``shardings`` if given — elastic
+        restore onto any mesh)."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        d = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+
+        def get(key: str):
+            a = data[key.replace("/", "__")]
+            if manifest["arrays"][key]["dtype"] == "bfloat16":
+                a = a.view(jax.numpy.bfloat16)
+            return a
+
+        if template is None:
+            return {"step": step, "meta": manifest["meta"], "get": get}
+
+        flat_t = _flatten(template)
+        flat_s = _flatten(shardings) if shardings is not None else None
+        leaves = []
+        for i, (key, leaf) in enumerate(flat_t):
+            a = get(key)
+            assert list(a.shape) == list(leaf.shape), \
+                f"{key}: ckpt {a.shape} vs template {leaf.shape}"
+            if flat_s is not None:
+                leaves.append(jax.device_put(a, flat_s[i][1]))
+            else:
+                leaves.append(jax.numpy.asarray(a))
+        treedef = jax.tree_util.tree_structure(template)
+        return {"step": step, "meta": manifest["meta"],
+                "tree": jax.tree_util.tree_unflatten(treedef, leaves)}

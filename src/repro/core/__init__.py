@@ -1,0 +1,31 @@
+"""repro.core — the paper's contribution: a pilot-based multi-runtime task
+execution framework (RADICAL-Pilot + Flux + Dragon, SC-W'25).
+
+Public surface:
+    SimEngine, Agent, RoutingPolicy      — discrete-event agent (paper scale)
+    LocalRuntime                          — real execution (threads + submeshes)
+    Task, TaskDescription, TaskState      — task state machine
+    Pilot, PilotDescription, PilotState   — pilot state machine
+    Campaign, Stage                       — workflow-of-workflows engine
+    make_impeccable_stages, run_impeccable
+    compute_metrics, concurrency_series   — paper metrics from event traces
+"""
+from repro.core.agent import (AdaptiveRoutingPolicy, Agent,
+                              RoutingPolicy, SimEngine)
+from repro.core.analytics import (RunMetrics, compute_metrics,
+                                  concurrency_series)
+from repro.core.campaign import Campaign, Stage, StageContext
+from repro.core.impeccable import make_impeccable_stages, run_impeccable
+from repro.core.local import LocalRuntime
+from repro.core.pilot import Pilot, PilotDescription, PilotState
+from repro.core.task import Task, TaskDescription, TaskState
+
+__all__ = [
+    "Agent", "AdaptiveRoutingPolicy", "RoutingPolicy", "SimEngine",
+    "LocalRuntime",
+    "Task", "TaskDescription", "TaskState",
+    "Pilot", "PilotDescription", "PilotState",
+    "Campaign", "Stage", "StageContext",
+    "make_impeccable_stages", "run_impeccable",
+    "RunMetrics", "compute_metrics", "concurrency_series",
+]

@@ -1,0 +1,346 @@
+"""The RP-style Agent: owns the pilot's resources, instantiates multiple
+runtime backends concurrently, routes tasks by execution model, and handles
+retries / failover / stragglers (§3).
+
+``SimEngine`` is the discrete-event substrate (virtual clock + seeded noise +
+platform-level srun slot accounting). The agent's dispatch pipeline is itself
+a service queue (RP's task-management subsystem, ~1600 tasks/s ceiling —
+§4.1.5), so end-to-end throughput saturates exactly where the paper measures
+it.
+"""
+from __future__ import annotations
+
+import math
+import random
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core import calibration as CAL
+from repro.core.events import Profiler
+from repro.core.executors.base import BaseExecutor
+from repro.core.executors.dragon import SimDragonExecutor
+from repro.core.executors.flux import SimFluxExecutor
+from repro.core.executors.srun import SimSrunExecutor
+from repro.core.resources import NodeSpec
+from repro.core.simclock import VirtualClock
+from repro.core.task import Task, TaskDescription, TaskState
+
+
+class SimEngine:
+    """Shared simulation state: clock, trace, seeded noise, srun slots."""
+
+    def __init__(self, seed: int = 0,
+                 srun_cap: int = CAL.SRUN_CONCURRENCY_CAP):
+        self.clock = VirtualClock()
+        self.profiler = Profiler()
+        self.rng = random.Random(seed)
+        self.srun_cap = srun_cap
+        self._srun_used = 0
+        self.duration_fn: Optional[Callable[[Task], float]] = None
+
+    def now(self) -> float:
+        return self.clock.now()
+
+    def noisy(self, mean: float, sigma: float = 0.0) -> float:
+        if sigma <= 0:
+            return mean
+        return mean * math.exp(self.rng.gauss(0.0, sigma))
+
+    def actual_duration(self, task: Task) -> float:
+        if self.duration_fn is not None:
+            return max(0.0, self.duration_fn(task))
+        return task.description.duration
+
+    # --- platform srun slot accounting (Frontier cap, §4.1.1) ---------------
+    @property
+    def srun_slots_free(self) -> int:
+        return self.srun_cap - self._srun_used
+
+    def take_srun_slot(self):
+        assert self._srun_used < self.srun_cap, "srun cap violated"
+        self._srun_used += 1
+
+    def release_srun_slot(self):
+        self._srun_used = max(0, self._srun_used - 1)
+
+
+class RoutingPolicy:
+    """Task-type-aware backend selection (§3.1): explicit override first,
+    then modality/coupling match, then fallback order."""
+
+    def __init__(self, order=("flux", "dragon", "srun")):
+        self.order = order
+
+    def route(self, task: Task, backends: Dict[str, BaseExecutor]) -> str:
+        d = task.description
+        if d.backend and d.backend in backends:
+            return d.backend
+        if d.kind == "function" and "dragon" in backends:
+            return "dragon"
+        if (d.nodes or d.coupling == "tight"):
+            for name in ("flux", "srun"):
+                if name in backends:
+                    return name
+        for name in self.order:
+            if name in backends and backends[name].accepts(task):
+                return name
+        raise RuntimeError(f"no backend accepts task {task.uid}")
+
+
+class AdaptiveRoutingPolicy(RoutingPolicy):
+    """Dynamic backend selection — the paper's §6 future work, implemented.
+
+    For *loose* tasks that more than one backend could serve, route to the
+    backend with the lowest estimated time-to-launch = queue depth /
+    observed completion rate (EWMA over inter-completion gaps). Tight /
+    multi-node / explicitly-routed tasks keep the static modality rules.
+    The agent feeds observations via ``observe_completion``.
+    """
+
+    def __init__(self, order=("flux", "dragon", "srun"), ewma: float = 0.2):
+        super().__init__(order)
+        self.ewma = ewma
+        self._rate: Dict[str, float] = {}
+        self._last_done: Dict[str, float] = {}
+
+    def observe_completion(self, backend: str, now: float):
+        last = self._last_done.get(backend)
+        self._last_done[backend] = now
+        if last is None or now <= last:
+            return
+        inst = 1.0 / (now - last)
+        prev = self._rate.get(backend, inst)
+        self._rate[backend] = (1 - self.ewma) * prev + self.ewma * inst
+
+    def _queue_depth(self, ex: BaseExecutor) -> int:
+        servers = getattr(ex, "instances", None)
+        if servers is None:
+            servers = [ex.server]
+        seen = set()
+        depth = 0
+        for s in servers:
+            if id(s.queue) not in seen:       # shared backlogs counted once
+                seen.add(id(s.queue))
+                depth += len(s.queue)
+        return depth
+
+    def route(self, task: Task, backends: Dict[str, BaseExecutor]) -> str:
+        d = task.description
+        if (d.backend or d.nodes or d.coupling == "tight"
+                or len(backends) == 1):
+            return super().route(task, backends)
+        eligible = [n for n, ex in backends.items() if ex.accepts(task)]
+        if len(eligible) <= 1:
+            return super().route(task, backends)
+
+        default = super().route(task, backends)
+
+        def wait_estimate(name: str) -> float:
+            ex = backends[name]
+            rate = self._rate.get(name, 0.0)
+            if rate <= 0.0:
+                # no completions observed yet: seed with the nominal
+                # service-model rate (refined online by the EWMA)
+                nominal = getattr(ex, "nominal_rate", None)
+                rate = nominal() if nominal is not None else 1.0
+            depth = self._queue_depth(ex)
+            est = depth / max(rate, 1e-9)
+            if name == default:
+                est *= 0.99          # tie-break toward the modality match
+            return est
+
+        return min(eligible, key=wait_estimate)
+
+
+class Agent:
+    """Pilot agent running over a SimEngine."""
+
+    def __init__(self, engine: SimEngine, n_nodes: int,
+                 backends: Dict[str, Dict[str, Any]],
+                 node_spec: NodeSpec = NodeSpec(cores=CAL.CORES_PER_NODE,
+                                                gpus=CAL.GPUS_PER_NODE),
+                 policy: Optional[RoutingPolicy] = None,
+                 dispatch_rate: float = CAL.RP_DISPATCH_RATE,
+                 speculation: bool = False,
+                 speculation_factor: float = 3.0):
+        self.engine = engine
+        self.n_nodes = n_nodes
+        self.node_spec = node_spec
+        self.policy = policy or RoutingPolicy()
+        self.dispatch_interval = 1.0 / dispatch_rate
+        self.speculation = speculation
+        self.speculation_factor = speculation_factor
+
+        self.tasks: Dict[str, Task] = {}
+        self._dispatch_q: deque = deque()
+        self._dispatch_busy = False
+        self._n_terminal = 0
+        self.on_task_done: Optional[Callable[[Task], None]] = None
+        self._spec_watch: Dict[str, Any] = {}
+        self._spec_clones: Dict[str, Task] = {}
+
+        self.backends: Dict[str, BaseExecutor] = {}
+        self._build_backends(backends)
+
+    # ------------------------------------------------------------ construction
+    def _build_backends(self, cfg: Dict[str, Dict[str, Any]]):
+        # resource split: explicit "nodes" per backend, else equal split
+        unassigned = [n for n, c in cfg.items() if "nodes" not in c]
+        assigned = sum(c.get("nodes", 0) for c in cfg.values())
+        share = ((self.n_nodes - assigned) // len(unassigned)
+                 if unassigned else 0)
+        for name, c in cfg.items():
+            nodes = c.get("nodes", share)
+            if name == "srun":
+                ex = SimSrunExecutor(self.engine, nodes, self.node_spec)
+            elif name == "flux":
+                ex = SimFluxExecutor(self.engine, nodes,
+                                     c.get("partitions", 1), self.node_spec)
+            elif name == "dragon":
+                ex = SimDragonExecutor(self.engine, nodes,
+                                       c.get("partitions", 1), self.node_spec)
+            else:
+                raise KeyError(name)
+            ex.on_complete = self._task_completed
+            ex.on_failure = self._task_failed
+            self.backends[name] = ex
+
+    def start(self):
+        """Bootstrap all backends concurrently (overhead = max, not sum)."""
+        t0 = self.engine.now()
+        self.engine.profiler.record(t0, "agent", "agent:start", {})
+        for name, ex in self.backends.items():
+            overhead = ex.start()
+            ex.ready_at = t0 + CAL.AGENT_STARTUP_S + overhead
+            self.engine.profiler.record(ex.ready_at, name, "executor:ready",
+                                        {"overhead": overhead})
+        self.ready_at = max(ex.ready_at for ex in self.backends.values())
+
+    # ---------------------------------------------------------------- submit
+    def submit(self, descriptions: List[TaskDescription]) -> List[Task]:
+        out = []
+        for d in descriptions:
+            task = Task(d)
+            self.tasks[task.uid] = task
+            task.advance(TaskState.SCHEDULING, self.engine.now(),
+                         self.engine.profiler)
+            self._dispatch_q.append(task)
+            out.append(task)
+        self._pump_dispatch()
+        return out
+
+    def _pump_dispatch(self):
+        if self._dispatch_busy or not self._dispatch_q:
+            return
+        self._dispatch_busy = True
+        self.engine.clock.schedule(self.dispatch_interval, self._dispatch_one)
+
+    def _dispatch_one(self):
+        self._dispatch_busy = False
+        if not self._dispatch_q:
+            return
+        task = self._dispatch_q.popleft()
+        if task.state == TaskState.CANCELED:
+            self._pump_dispatch()
+            return
+        name = self.policy.route(task, self.backends)
+        ex = self.backends[name]
+        wait = max(0.0, getattr(ex, "ready_at", 0.0) - self.engine.now())
+        if wait > 0:
+            # backend still bootstrapping: hold and retry at readiness
+            self._dispatch_q.appendleft(task)
+            self.engine.clock.schedule(wait, self._pump_dispatch)
+            return
+        task.advance(TaskState.QUEUED, self.engine.now(),
+                     self.engine.profiler)
+        ex.submit(task)
+        if self.speculation and task.description.duration > 0:
+            self._arm_speculation(task)
+        self._pump_dispatch()
+
+    # ------------------------------------------------------------- lifecycle
+    def _task_completed(self, task: Task):
+        if hasattr(self.policy, "observe_completion") and task.backend:
+            self.policy.observe_completion(task.backend, self.engine.now())
+        clone = self._spec_clones.pop(task.uid, None)
+        if clone is not None and not clone.done:
+            self.backends[clone.backend or "flux"].cancel(clone)
+        orig_uid = task.speculative_of
+        if orig_uid:
+            orig = self.tasks.get(orig_uid)
+            self._spec_clones.pop(orig_uid, None)
+            if orig is not None and not orig.done:
+                self.backends[orig.backend].cancel(orig)
+                orig.result = task.result
+        self._finish(task)
+
+    def _task_failed(self, task: Task, err: str):
+        if task.retries < task.description.max_retries:
+            task.retries += 1
+            self.engine.profiler.record(self.engine.now(), task.uid,
+                                        "agent:retry", {"n": task.retries})
+            task.advance(TaskState.SCHEDULING, self.engine.now(),
+                         self.engine.profiler)
+            self._dispatch_q.append(task)
+            self._pump_dispatch()
+            return
+        self._finish(task)
+
+    def _finish(self, task: Task):
+        self._n_terminal += 1
+        if self.on_task_done:
+            self.on_task_done(task)
+
+    # ----------------------------------------------------------- speculation
+    def _arm_speculation(self, task: Task):
+        deadline = task.description.duration * self.speculation_factor
+
+        def watchdog():
+            if task.done or task.uid in self._spec_clones:
+                return
+            if task.state != TaskState.RUNNING:
+                # not yet running: re-arm
+                self.engine.clock.schedule(deadline, watchdog)
+                return
+            import dataclasses
+            d2 = dataclasses.replace(task.description, uid="")
+            clone = Task(d2)
+            clone.speculative_of = task.uid
+            self.tasks[clone.uid] = clone
+            self._spec_clones[task.uid] = clone
+            self.engine.profiler.record(self.engine.now(), task.uid,
+                                        "agent:speculate",
+                                        {"clone": clone.uid})
+            clone.advance(TaskState.SCHEDULING, self.engine.now(),
+                          self.engine.profiler)
+            self._dispatch_q.append(clone)
+            self._pump_dispatch()
+
+        self.engine.clock.schedule(deadline * 1.5, watchdog)
+
+    # ----------------------------------------------------------------- fault
+    def fail_flux_instance(self, idx: int, backend: str = "flux",
+                           restart: bool = True):
+        ex = self.backends[backend]
+        orphans = ex.fail_instance(idx)
+        for t in orphans:
+            t.advance(TaskState.SCHEDULING, self.engine.now(),
+                      self.engine.profiler)
+            self._dispatch_q.append(t)
+        self._pump_dispatch()
+        if restart and hasattr(ex, "restart_instance"):
+            ex.restart_instance(idx)
+
+    # ------------------------------------------------------------------- run
+    def run_until_complete(self, max_events: int = 50_000_000) -> float:
+        self.engine.clock.run(max_events=max_events)
+        unfinished = [t for t in self.tasks.values() if not t.done]
+        if unfinished:
+            raise RuntimeError(
+                f"simulation drained with {len(unfinished)} unfinished tasks "
+                f"(first: {unfinished[0]})")
+        return self.engine.now()
+
+    @property
+    def total_cores(self) -> int:
+        return self.n_nodes * self.node_spec.cores

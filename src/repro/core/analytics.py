@@ -1,0 +1,107 @@
+"""Metrics from event traces — identical definitions to the paper §4:
+
+* throughput  = tasks launched per second (execution start rate),
+* utilization = busy core-seconds / (allocated cores x makespan),
+* makespan    = first submission -> last completion,
+* overhead    = agent+backend bootstrap before the first launch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.task import Task, TaskState
+
+
+@dataclass
+class RunMetrics:
+    n_tasks: int
+    n_done: int
+    n_failed: int
+    makespan: float
+    throughput_avg: float          # tasks/s over the launch window
+    throughput_peak: float         # best 10-second window
+    utilization: float             # core-seconds busy / available
+    overhead: float                # bootstrap time before first launch
+    concurrency_peak: int
+
+    def as_dict(self) -> Dict[str, float]:
+        return self.__dict__.copy()
+
+
+def compute_metrics(tasks: Sequence[Task], total_cores: int,
+                    window: float = 10.0,
+                    t_submit0: Optional[float] = None) -> RunMetrics:
+    done = [t for t in tasks if t.state == TaskState.DONE]
+    failed = [t for t in tasks if t.state == TaskState.FAILED]
+    starts = sorted(t.timestamps.get("RUNNING", 0.0) for t in done)
+    ends = [t.timestamps["DONE"] for t in done]
+    if not done:
+        return RunMetrics(len(tasks), 0, len(failed), 0.0, 0.0, 0.0, 0.0,
+                          0.0, 0)
+
+    t0 = (t_submit0 if t_submit0 is not None
+          else min(t.timestamps.get("SCHEDULING", 0.0) for t in tasks))
+    makespan = max(ends) - t0
+
+    # throughput over the launch window
+    launch_span = max(starts) - min(starts)
+    thr_avg = len(starts) / launch_span if launch_span > 0 else float(len(starts))
+    # peak over sliding windows
+    thr_peak = 0.0
+    j = 0
+    for i in range(len(starts)):
+        while starts[i] - starts[j] > window:
+            j += 1
+        thr_peak = max(thr_peak, (i - j + 1) / window)
+
+    def cores_of(t: Task) -> int:
+        d = t.description
+        from repro.core.calibration import CORES_PER_NODE
+        return d.nodes * CORES_PER_NODE if d.nodes else max(1, d.cores)
+
+    busy = sum((t.timestamps["DONE"] - t.timestamps["RUNNING"]) * cores_of(t)
+               for t in done)
+    # utilization over the execution window (first launch -> last completion):
+    # bootstrap is reported separately as `overhead`, matching the paper's
+    # metric split (§4, Fig. 7).
+    exec_window = max(ends) - min(starts)
+    util = busy / (total_cores * exec_window) if exec_window > 0 else 0.0
+
+    overhead = min(starts) - t0
+
+    # peak concurrency via sweep
+    events = sorted([(s, 1) for s in starts]
+                    + [(t.timestamps["DONE"], -1) for t in done])
+    cur = peak = 0
+    for _, d in events:
+        cur += d
+        peak = max(peak, cur)
+
+    return RunMetrics(len(tasks), len(done), len(failed), makespan,
+                      thr_avg, thr_peak, min(1.0, util), overhead, peak)
+
+
+def concurrency_series(tasks: Sequence[Task], dt: float = 10.0
+                       ) -> List[tuple]:
+    """(t, #running) samples — the paper's Fig. 4/8 green curves."""
+    done = [t for t in tasks if "RUNNING" in t.timestamps and
+            ("DONE" in t.timestamps or "FAILED" in t.timestamps)]
+    if not done:
+        return []
+    events = []
+    for t in done:
+        end = t.timestamps.get("DONE", t.timestamps.get("FAILED"))
+        events.append((t.timestamps["RUNNING"], 1))
+        events.append((end, -1))
+    events.sort()
+    out = []
+    cur = 0
+    next_sample = 0.0
+    for tm, d in events:
+        while tm >= next_sample:
+            out.append((next_sample, cur))
+            next_sample += dt
+        cur += d
+    out.append((events[-1][0], 0))
+    return out

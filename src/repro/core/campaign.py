@@ -1,0 +1,112 @@
+"""Workflow-of-workflows engine: stages with dependencies, adaptive task
+generation from runtime feedback (idle-resource polling), per-stage metrics.
+This is the layer the IMPECCABLE campaign (§2) runs on."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.agent import Agent
+from repro.core.task import Task, TaskDescription, TaskState
+
+
+@dataclass
+class Stage:
+    """``make_tasks(ctx)`` is called when all dependencies completed; it may
+    inspect ``ctx`` (agent, free resources, previous-stage results) to size
+    the workload adaptively (§4.2: "the number of tasks instantiated by some
+    workflows is adjusted dynamically at runtime")."""
+    name: str
+    make_tasks: Callable[["StageContext"], List[TaskDescription]]
+    depends_on: Sequence[str] = ()
+    workflow: str = ""
+
+
+@dataclass
+class StageContext:
+    agent: Agent
+    campaign: "Campaign"
+    stage: Stage
+
+    @property
+    def free_cores(self) -> int:
+        free = 0
+        for ex in self.agent.backends.values():
+            servers = getattr(ex, "instances", None) or [ex.server]
+            for s in servers:
+                if not s.dead:
+                    free += sum(s.pool.free_cores.values())
+        return free
+
+    def results(self, stage_name: str) -> List[Task]:
+        return self.campaign.stage_tasks.get(stage_name, [])
+
+
+class Campaign:
+    def __init__(self, agent: Agent, stages: Sequence[Stage],
+                 name: str = "campaign"):
+        self.agent = agent
+        self.name = name
+        self.stages = {s.name: s for s in stages}
+        self._waiting: Dict[str, set] = {
+            s.name: set(s.depends_on) for s in stages}
+        self.stage_tasks: Dict[str, List[Task]] = {}
+        self._stage_pending: Dict[str, int] = {}
+        self._launched: set = set()
+        self._done_stages: set = set()
+        self._started = False
+        agent.on_task_done = self._task_done
+
+    # ------------------------------------------------------------------ run
+    def start(self):
+        assert not self._started
+        self._started = True
+        self.agent.engine.profiler.record(self.agent.engine.now(), self.name,
+                                          "campaign:start", {})
+        for name, deps in list(self._waiting.items()):
+            if not deps:
+                self._launch_stage(name)
+
+    def _launch_stage(self, name: str):
+        if name in self._launched:
+            return
+        self._launched.add(name)
+        stage = self.stages[name]
+        ctx = StageContext(self.agent, self, stage)
+        descs = stage.make_tasks(ctx)
+        for d in descs:
+            d.stage = name
+            d.workflow = stage.workflow or name
+        self.agent.engine.profiler.record(
+            self.agent.engine.now(), name, "stage:start",
+            {"tasks": len(descs)})
+        if not descs:
+            self._stage_complete(name)
+            return
+        self._stage_pending[name] = len(descs)
+        self.stage_tasks[name] = self.agent.submit(descs)
+
+    def _task_done(self, task: Task):
+        stage = task.description.stage
+        if stage not in self._stage_pending:
+            return
+        self._stage_pending[stage] -= 1
+        if self._stage_pending[stage] == 0:
+            self._stage_complete(stage)
+
+    def _stage_complete(self, name: str):
+        self._done_stages.add(name)
+        self.agent.engine.profiler.record(self.agent.engine.now(), name,
+                                          "stage:done", {})
+        for other, deps in self._waiting.items():
+            if name in deps:
+                deps.discard(name)
+                if not deps:
+                    self._launch_stage(other)
+
+    @property
+    def complete(self) -> bool:
+        return len(self._done_stages) == len(self.stages)
+
+    def all_tasks(self) -> List[Task]:
+        return [t for ts in self.stage_tasks.values() for t in ts]

@@ -1,0 +1,43 @@
+"""Event recording (RADICAL-Analytics style): every state transition and
+runtime action is a timestamped event; the metrics pipeline (analytics.py)
+derives throughput/utilization/makespan purely from this trace."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional
+
+
+@dataclass
+class Event:
+    time: float
+    entity: str          # task/pilot/executor uid
+    name: str            # e.g. "state:RUNNING", "exec:launch", "agent:dispatch"
+    data: Optional[Dict[str, Any]] = None
+
+
+class Profiler:
+    """Append-only event trace with simple indexing."""
+
+    def __init__(self):
+        self.events: List[Event] = []
+        self._by_name: Dict[str, List[Event]] = {}
+
+    def record(self, time: float, entity: str, name: str,
+               data: Optional[Dict[str, Any]] = None) -> Event:
+        ev = Event(time, entity, name, data)
+        self.events.append(ev)
+        self._by_name.setdefault(name, []).append(ev)
+        return ev
+
+    def by_name(self, name: str) -> List[Event]:
+        return self._by_name.get(name, [])
+
+    def times(self, name: str) -> List[float]:
+        return [e.time for e in self.by_name(name)]
+
+    def window(self, name: str) -> Optional[tuple]:
+        ts = self.times(name)
+        return (min(ts), max(ts)) if ts else None
+
+    def __len__(self):
+        return len(self.events)

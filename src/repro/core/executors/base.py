@@ -1,0 +1,209 @@
+"""Executor interface + the shared discrete-event launch-server model.
+
+A backend executor is, in queueing terms, one or more *launch servers*: a
+FIFO-with-backfill queue in front of a single server whose service time is the
+backend's measured per-task launch cost (calibration.py), gated by a resource
+pool (and, for srun, the platform concurrency cap). Event-driven completions
+re-pump the queue — no polling anywhere, matching §3.2's event-level
+integration.
+"""
+from __future__ import annotations
+
+import math
+from abc import ABC, abstractmethod
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+from repro.core.resources import Allocation, NodePool
+from repro.core.task import Task, TaskState
+
+
+class BaseExecutor(ABC):
+    """Common executor surface for sim and real modes."""
+
+    kind: str = "base"
+
+    def __init__(self, name: str):
+        self.name = name
+        self.alive = False
+        self.on_complete: Optional[Callable[[Task], None]] = None
+        self.on_failure: Optional[Callable[[Task, str], None]] = None
+        self.on_requeue: Optional[Callable[[Task], None]] = None
+        self.stats: Dict[str, float] = {"launched": 0, "completed": 0,
+                                        "failed": 0}
+
+    @abstractmethod
+    def start(self) -> float:
+        """Bootstrap; returns the startup overhead in seconds."""
+
+    @abstractmethod
+    def submit(self, task: Task) -> None: ...
+
+    @abstractmethod
+    def cancel(self, task: Task) -> None: ...
+
+    def accepts(self, task: Task) -> bool:
+        return True
+
+    @property
+    @abstractmethod
+    def total_cores(self) -> int: ...
+
+
+class SimLaunchServer:
+    """Single launch server + resource pool + optional admission gate."""
+
+    def __init__(self, engine, name: str, pool: NodePool,
+                 service_time_fn: Callable[[Task], float],
+                 admission: Optional[Callable[[Task], bool]] = None,
+                 on_admit: Optional[Callable[[Task], None]] = None,
+                 on_release: Optional[Callable[[Task], None]] = None,
+                 queue: Optional[Deque[Task]] = None,
+                 scan_limit: int = 64):
+        self.engine = engine
+        self.name = name
+        self.pool = pool
+        self.service_time_fn = service_time_fn
+        self.admission = admission
+        self.on_admit = on_admit
+        self.on_release = on_release
+        # late binding: multiple servers may share one backlog queue and pull
+        # work as resources free (RP's pilot-level late binding, §3)
+        self.owns_queue = queue is None
+        self.queue: Deque[Task] = deque() if queue is None else queue
+        self.scan_limit = scan_limit
+        self.busy = False
+        self.dead = False
+        self.running: Dict[str, Task] = {}
+        self.on_complete: Optional[Callable[[Task], None]] = None
+        self.on_failure: Optional[Callable[[Task, str], None]] = None
+        self._completion_events: Dict[str, object] = {}
+
+    # -------------------------------------------------------------- submit
+    def submit(self, task: Task):
+        assert not self.dead, f"{self.name}: submit to dead server"
+        self.queue.append(task)
+        self.pump()
+
+    def pump(self):
+        if self.busy or self.dead:
+            return
+        # bounded backfill: first queued task that fits & passes admission
+        for i, task in enumerate(self.queue):
+            if i >= self.scan_limit:
+                break
+            if task.state == TaskState.CANCELED:
+                continue
+            if self.admission is not None and not self.admission(task):
+                continue
+            alloc = self.pool.alloc(task.description)
+            if alloc is None:
+                continue
+            del self.queue[i]
+            self._launch(task, alloc)
+            return
+
+    def _launch(self, task: Task, alloc: Allocation):
+        task.allocation = alloc
+        if self.on_admit:
+            self.on_admit(task)
+        task.advance(TaskState.LAUNCHING, self.engine.now(),
+                     self.engine.profiler)
+        self.busy = True
+        svc = max(1e-6, self.service_time_fn(task))
+        self.engine.clock.schedule(svc, self._launched, task)
+
+    def _launched(self, task: Task):
+        self.busy = False
+        if self.dead:
+            return
+        if task.state == TaskState.CANCELED:
+            self._release(task)
+            self.pump()
+            return
+        task.advance(TaskState.RUNNING, self.engine.now(),
+                     self.engine.profiler)
+        self.running[task.uid] = task
+        dur = self.engine.actual_duration(task)
+        ev = self.engine.clock.schedule(dur, self._complete, task)
+        self._completion_events[task.uid] = ev
+        self.pump()
+
+    def _complete(self, task: Task):
+        if self.dead or task.uid not in self.running:
+            return
+        del self.running[task.uid]
+        self._completion_events.pop(task.uid, None)
+        self._release(task)
+        if task.state == TaskState.RUNNING:
+            task.advance(TaskState.DONE, self.engine.now(),
+                         self.engine.profiler)
+            if self.on_complete:
+                self.on_complete(task)
+        self.pump()
+
+    def _release(self, task: Task):
+        if task.allocation is not None:
+            self.pool.free(task.allocation)
+            task.allocation = None
+        if self.on_release:
+            self.on_release(task)
+
+    # -------------------------------------------------------------- control
+    def cancel(self, task: Task):
+        if task.uid in self.running:
+            del self.running[task.uid]
+            ev = self._completion_events.pop(task.uid, None)
+            if ev is not None:
+                ev.cancel()
+            self._release(task)
+            task.advance(TaskState.CANCELED, self.engine.now(),
+                         self.engine.profiler)
+            self.pump()
+        else:
+            try:
+                self.queue.remove(task)
+                task.advance(TaskState.CANCELED, self.engine.now(),
+                             self.engine.profiler)
+            except ValueError:
+                pass
+
+    def kill(self) -> List[Task]:
+        """Server dies: running tasks fail; queued tasks are handed back
+        (fault isolation, §4.1.3). A shared backlog survives — siblings keep
+        draining it."""
+        self.dead = True
+        victims = list(self.running.values())
+        for t in victims:
+            ev = self._completion_events.pop(t.uid, None)
+            if ev is not None:
+                ev.cancel()
+            self._release(t)
+            t.error = f"{self.name}: executor failure"
+            t.advance(TaskState.FAILED, self.engine.now(),
+                      self.engine.profiler)
+            if self.on_failure:
+                self.on_failure(t, t.error)
+        orphans = []
+        if self.owns_queue:
+            orphans = [t for t in self.queue if not t.done]
+            self.queue.clear()
+        self.running.clear()
+        return orphans
+
+class CoordinationLimiter:
+    """Serialization stage modeling RP's per-executor coordination cost
+    (calibration.rp_coord_rate). Reserving a slot returns the delay until the
+    coordination pipeline has processed this launch."""
+
+    def __init__(self, engine, nodes: int, n_instances: int):
+        from repro.core import calibration as CAL
+        self.engine = engine
+        self.interval = 1.0 / CAL.rp_coord_rate(nodes, n_instances)
+        self._next = 0.0
+
+    def reserve(self) -> float:
+        now = self.engine.now()
+        start = max(now, self._next)
+        self._next = start + self.interval
+        return self._next - now

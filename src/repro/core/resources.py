@@ -1,0 +1,141 @@
+"""Resource bookkeeping: nodes with cores/GPUs, allocations, partitions.
+
+The same ``NodePool`` serves the simulator (Frontier-like nodes) and real mode
+(host cores / TPU submeshes mapped to abstract nodes). Invariant (tested with
+hypothesis): free counts never go negative and alloc/free round-trips restore
+them exactly — no oversubscription ever.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.task import TaskDescription
+
+
+@dataclass(frozen=True)
+class NodeSpec:
+    cores: int = 56          # Frontier compute node (usable cores, SMT=1)
+    gpus: int = 8            # logical GPUs (GCDs)
+
+
+@dataclass
+class Allocation:
+    """cores/gpus taken per node index."""
+    node_cores: Dict[int, int] = field(default_factory=dict)
+    node_gpus: Dict[int, int] = field(default_factory=dict)
+
+    @property
+    def total_cores(self) -> int:
+        return sum(self.node_cores.values())
+
+
+class NodePool:
+    """First-fit allocator over a contiguous node range."""
+
+    def __init__(self, n_nodes: int, spec: NodeSpec = NodeSpec(),
+                 first_node: int = 0):
+        self.spec = spec
+        self.n_nodes = n_nodes
+        self.first_node = first_node
+        self.free_cores: Dict[int, int] = {
+            first_node + i: spec.cores for i in range(n_nodes)}
+        self.free_gpus: Dict[int, int] = {
+            first_node + i: spec.gpus for i in range(n_nodes)}
+
+    # ------------------------------------------------------------------ alloc
+    def can_fit(self, td: TaskDescription) -> bool:
+        return self._try_alloc(td, commit=False) is not None
+
+    def alloc(self, td: TaskDescription) -> Optional[Allocation]:
+        return self._try_alloc(td, commit=True)
+
+    def _try_alloc(self, td: TaskDescription, commit: bool
+                   ) -> Optional[Allocation]:
+        if td.nodes:
+            # whole-node co-scheduling
+            empty = [n for n, c in self.free_cores.items()
+                     if c == self.spec.cores and
+                     self.free_gpus[n] == self.spec.gpus]
+            if len(empty) < td.nodes:
+                return None
+            alloc = Allocation()
+            for n in sorted(empty)[: td.nodes]:
+                alloc.node_cores[n] = self.spec.cores
+                alloc.node_gpus[n] = self.spec.gpus
+            if commit:
+                self._commit(alloc)
+            return alloc
+        # packed cores/gpus (may not span nodes for simplicity: per-node fit)
+        need_c, need_g = td.cores, td.gpus
+        alloc = Allocation()
+        for n in sorted(self.free_cores):
+            if need_c <= 0 and need_g <= 0:
+                break
+            c = min(self.free_cores[n], need_c)
+            g = min(self.free_gpus[n], need_g)
+            if td.cores <= self.spec.cores and c < td.cores and c < need_c:
+                # single-node task must fit one node
+                if self.free_cores[n] < td.cores or self.free_gpus[n] < td.gpus:
+                    continue
+            if c > 0 or g > 0:
+                if c:
+                    alloc.node_cores[n] = c
+                    need_c -= c
+                if g:
+                    alloc.node_gpus[n] = g
+                    need_g -= g
+        if need_c > 0 or need_g > 0:
+            return None
+        if commit:
+            self._commit(alloc)
+        return alloc
+
+    def _commit(self, alloc: Allocation):
+        for n, c in alloc.node_cores.items():
+            self.free_cores[n] -= c
+            assert self.free_cores[n] >= 0, "core oversubscription"
+        for n, g in alloc.node_gpus.items():
+            self.free_gpus[n] -= g
+            assert self.free_gpus[n] >= 0, "gpu oversubscription"
+
+    def free(self, alloc: Allocation):
+        for n, c in alloc.node_cores.items():
+            self.free_cores[n] += c
+            assert self.free_cores[n] <= self.spec.cores, "double free"
+        for n, g in alloc.node_gpus.items():
+            self.free_gpus[n] += g
+            assert self.free_gpus[n] <= self.spec.gpus, "double free"
+
+    # ------------------------------------------------------------------ stats
+    @property
+    def total_cores(self) -> int:
+        return self.n_nodes * self.spec.cores
+
+    @property
+    def total_gpus(self) -> int:
+        return self.n_nodes * self.spec.gpus
+
+    @property
+    def used_cores(self) -> int:
+        return self.total_cores - sum(self.free_cores.values())
+
+    @property
+    def used_gpus(self) -> int:
+        return self.total_gpus - sum(self.free_gpus.values())
+
+
+def partition_nodes(n_nodes: int, n_partitions: int,
+                    spec: NodeSpec = NodeSpec()) -> List[NodePool]:
+    """Split an allocation into disjoint contiguous partitions (the Flux-
+    instance layout). Remainder nodes go to the last partition."""
+    assert 1 <= n_partitions <= n_nodes
+    base = n_nodes // n_partitions
+    pools = []
+    start = 0
+    for i in range(n_partitions):
+        size = base + (n_nodes - base * n_partitions if i == n_partitions - 1
+                       else 0)
+        pools.append(NodePool(size, spec, first_node=start))
+        start += size
+    return pools

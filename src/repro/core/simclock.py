@@ -1,0 +1,97 @@
+"""Clocks for the runtime: a discrete-event virtual clock (paper-scale
+simulation of 4-1024 node allocations) and a wall clock (real execution).
+
+Both expose ``now()`` and ``schedule(delay, fn, *args)``; the engine decides
+which to drive. The virtual clock is a classic event heap with stable FIFO
+tie-breaking, cancelable events, and watchdog-safe reentrancy (callbacks may
+schedule/cancel freely).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+from typing import Callable, List, Optional, Tuple
+
+
+class ScheduledEvent:
+    __slots__ = ("time", "seq", "fn", "args", "canceled")
+
+    def __init__(self, t: float, seq: int, fn: Callable, args: tuple):
+        self.time = t
+        self.seq = seq
+        self.fn = fn
+        self.args = args
+        self.canceled = False
+
+    def cancel(self):
+        self.canceled = True
+
+    def __lt__(self, other):
+        return (self.time, self.seq) < (other.time, other.seq)
+
+
+class VirtualClock:
+    """Deterministic discrete-event clock."""
+
+    def __init__(self, start: float = 0.0):
+        self._now = start
+        self._heap: List[ScheduledEvent] = []
+        self._seq = itertools.count()
+
+    def now(self) -> float:
+        return self._now
+
+    def schedule(self, delay: float, fn: Callable, *args) -> ScheduledEvent:
+        ev = ScheduledEvent(self._now + max(0.0, delay), next(self._seq), fn, args)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def run(self, until: Optional[float] = None, max_events: int = 50_000_000
+            ) -> int:
+        """Drain events (up to ``until`` if given). Returns #events fired."""
+        fired = 0
+        while self._heap and fired < max_events:
+            ev = self._heap[0]
+            if until is not None and ev.time > until:
+                break
+            heapq.heappop(self._heap)
+            if ev.canceled:
+                continue
+            self._now = ev.time
+            ev.fn(*ev.args)
+            fired += 1
+        if until is not None and self._now < until and not self._heap:
+            self._now = until
+        if fired >= max_events:
+            raise RuntimeError("VirtualClock: event budget exhausted "
+                               "(runaway simulation?)")
+        return fired
+
+    @property
+    def pending(self) -> int:
+        return sum(1 for e in self._heap if not e.canceled)
+
+
+class RealClock:
+    """Wall clock; schedule() uses daemon timer threads."""
+
+    def __init__(self):
+        self._t0 = time.monotonic()
+        self._timers: List[threading.Timer] = []
+
+    def now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def schedule(self, delay: float, fn: Callable, *args):
+        t = threading.Timer(max(0.0, delay), fn, args=args)
+        t.daemon = True
+        t.start()
+        self._timers.append(t)
+        return t
+
+    def run(self, until: Optional[float] = None, max_events: int = 0) -> int:
+        if until is not None:
+            time.sleep(max(0.0, until - self.now()))
+        return 0

@@ -1,0 +1,108 @@
+"""Task abstraction: description + state machine, mirroring RADICAL-Pilot's
+task lifecycle. Transitions are validated; every transition is timestamped
+for the analytics pipeline."""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+
+class TaskState(str, Enum):
+    NEW = "NEW"
+    SCHEDULING = "SCHEDULING"      # in the agent scheduler
+    QUEUED = "QUEUED"              # in a backend executor queue
+    LAUNCHING = "LAUNCHING"        # backend is placing/launching it
+    RUNNING = "RUNNING"
+    DONE = "DONE"
+    FAILED = "FAILED"
+    CANCELED = "CANCELED"
+
+
+TERMINAL = {TaskState.DONE, TaskState.FAILED, TaskState.CANCELED}
+
+_LEGAL: Dict[TaskState, set] = {
+    TaskState.NEW: {TaskState.SCHEDULING, TaskState.CANCELED},
+    TaskState.SCHEDULING: {TaskState.QUEUED, TaskState.FAILED,
+                           TaskState.CANCELED},
+    TaskState.QUEUED: {TaskState.LAUNCHING, TaskState.SCHEDULING,
+                       TaskState.FAILED, TaskState.CANCELED},
+    TaskState.LAUNCHING: {TaskState.RUNNING, TaskState.FAILED,
+                          TaskState.CANCELED},
+    TaskState.RUNNING: {TaskState.DONE, TaskState.FAILED, TaskState.CANCELED},
+    TaskState.DONE: set(),
+    TaskState.FAILED: {TaskState.SCHEDULING},      # retry re-enters scheduling
+    TaskState.CANCELED: set(),
+}
+
+_uid_counter = itertools.count()
+
+
+def new_uid(prefix: str = "task") -> str:
+    return f"{prefix}.{next(_uid_counter):06d}"
+
+
+@dataclass
+class TaskDescription:
+    uid: str = ""
+    kind: str = "executable"            # executable | function
+    cores: int = 1
+    gpus: int = 0
+    nodes: int = 0                      # >0: whole-node co-scheduling (MPI-like)
+    duration: float = 0.0               # sim-mode execution time
+    fn: Optional[Callable] = None       # real-mode payload
+    args: Tuple = ()
+    kwargs: Dict[str, Any] = field(default_factory=dict)
+    coupling: str = "loose"             # loose | tight | data
+    backend: Optional[str] = None       # explicit routing override
+    stage: str = ""
+    workflow: str = ""
+    max_retries: int = 0
+
+    def __post_init__(self):
+        if not self.uid:
+            self.uid = new_uid()
+        if self.nodes and self.coupling == "loose":
+            self.coupling = "tight"
+
+
+class InvalidTransition(RuntimeError):
+    pass
+
+
+class Task:
+    def __init__(self, description: TaskDescription):
+        self.description = description
+        self.uid = description.uid
+        self.state = TaskState.NEW
+        self.timestamps: Dict[str, float] = {}
+        self.retries = 0
+        self.result: Any = None
+        self.error: Optional[str] = None
+        self.backend: Optional[str] = None      # executor that ran it
+        self.partition: Optional[int] = None
+        self.allocation: Any = None              # resource bookkeeping handle
+        self.speculative_of: Optional[str] = None
+
+    def advance(self, state: TaskState, t: float, profiler=None):
+        if state not in _LEGAL[self.state]:
+            raise InvalidTransition(
+                f"{self.uid}: {self.state.value} -> {state.value}")
+        self.state = state
+        # first-transition timestamp wins for stable metrics on retries,
+        # except RUNNING/terminal which reflect the final attempt
+        key = state.value
+        if key not in self.timestamps or state in TERMINAL | {TaskState.RUNNING,
+                                                              TaskState.LAUNCHING}:
+            self.timestamps[key] = t
+        if profiler is not None:
+            profiler.record(t, self.uid, f"state:{state.value}",
+                            {"backend": self.backend})
+
+    @property
+    def done(self) -> bool:
+        return self.state in TERMINAL
+
+    def __repr__(self):
+        return f"<Task {self.uid} {self.state.value} backend={self.backend}>"

@@ -1,0 +1,125 @@
+"""Data pipeline: deterministic synthetic token streams (LM pretraining
+shape), host-side sharding, background prefetch, and checkpointable state.
+
+Synthetic data is the norm for systems benchmarking (the paper's null/dummy
+workloads are the same idea); the pipeline is nonetheless production-shaped:
+per-host sharding by data-parallel rank, double-buffered prefetch, and a
+restorable cursor so checkpoint/restart resumes the stream exactly.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass
+class DataConfig:
+    seq_len: int = 1024
+    global_batch: int = 8
+    seed: int = 1234
+    n_hosts: int = 1
+    host_id: int = 0
+    prefetch: int = 2
+
+
+class SyntheticTokenStream:
+    """Deterministic zipf-ish token stream with a restorable cursor.
+
+    Batches are generated per host: host h of H gets rows
+    [h*B/H, (h+1)*B/H) of the global batch, so multi-host training sees one
+    coherent global stream (matching jax.make_array_from_process_local_data
+    semantics)."""
+
+    def __init__(self, cfg: ModelConfig, dcfg: DataConfig):
+        self.cfg = cfg
+        self.dcfg = dcfg
+        self.step = 0
+        assert dcfg.global_batch % dcfg.n_hosts == 0
+        self.local_batch = dcfg.global_batch // dcfg.n_hosts
+
+    def state_dict(self) -> Dict[str, int]:
+        return {"step": self.step, "seed": self.dcfg.seed}
+
+    def load_state_dict(self, state: Dict[str, int]):
+        assert state["seed"] == self.dcfg.seed, "stream seed mismatch"
+        self.step = int(state["step"])
+
+    def _batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        d = self.dcfg
+        rng = np.random.default_rng(
+            np.random.SeedSequence([d.seed, step, d.host_id]))
+        B, S = self.local_batch, d.seq_len
+        V = self.cfg.vocab_size
+        # zipf-flavored marginals: realistic token frequency skew
+        z = rng.zipf(1.3, size=(B, S + 1)).astype(np.int64)
+        tokens = (z % (V - 2)) + 1
+        batch = {
+            "tokens": tokens[:, :S].astype(np.int32),
+            "labels": tokens[:, 1:].astype(np.int32),
+        }
+        if self.cfg.rope_kind == "mrope":
+            pos = np.broadcast_to(np.arange(S, dtype=np.int32)[None, None],
+                                  (3, B, S)).copy()
+        else:
+            pos = np.broadcast_to(np.arange(S, dtype=np.int32)[None],
+                                  (B, S)).copy()
+        batch["positions"] = pos
+        if self.cfg.input_mode == "embeddings":
+            batch["embeds"] = rng.standard_normal(
+                (B, S, self.cfg.d_model), dtype=np.float32)
+        return batch
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        b = self._batch_at(self.step)
+        self.step += 1
+        return b
+
+
+class PrefetchingLoader:
+    """Background-thread prefetch (double buffering) over any iterator."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self._it = it
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._err: Optional[BaseException] = None
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _fill(self):
+        try:
+            for item in self._it:
+                if self._stop.is_set():
+                    return
+                self._q.put(item)
+        except BaseException as e:                           # noqa: BLE001
+            self._err = e
+        finally:
+            self._q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is None:
+            if self._err:
+                raise self._err
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stop.set()
+
+
+def make_loader(cfg: ModelConfig, dcfg: DataConfig) -> SyntheticTokenStream:
+    return SyntheticTokenStream(cfg, dcfg)

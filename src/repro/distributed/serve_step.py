@@ -1,0 +1,54 @@
+"""Serving-step factories: prefill (prompt -> last-token logits + caches) and
+decode (one token against caches), plus greedy/temperature sampling."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch) -> Tuple[jnp.ndarray, Any]:
+        logits, _, cache = M.forward(params, cfg, batch, mode="prefill")
+        return logits, cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, batch, cache) -> Tuple[jnp.ndarray, Any]:
+        return M.decode(params, cfg, batch, cache)
+    return decode_step
+
+
+def sample(logits: jnp.ndarray, key, temperature: float = 0.0,
+           vocab_size: int = 0) -> jnp.ndarray:
+    """logits (B,1,V) -> tokens (B,1). temperature 0 = greedy.
+    Padded-vocab tail is masked out."""
+    if vocab_size:
+        neg = jnp.full_like(logits, -1e30)
+        mask = jnp.arange(logits.shape[-1]) < vocab_size
+        logits = jnp.where(mask, logits, neg)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, logits / temperature, axis=-1)
+
+
+def pad_cache(cache: Dict[str, Any], cfg: ModelConfig, max_len: int
+              ) -> Dict[str, Any]:
+    """Grow prefill-sized caches (seq dim == prompt len) to ``max_len`` so
+    decode can append. Seq dim is axis 2 of k/v/c_kv/k_rope leaves."""
+    def grow(path, leaf):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("k", "v", "c_kv", "k_rope"):
+            seq_ax = 2
+            cur = leaf.shape[seq_ax]
+            if cur < max_len:
+                pad = [(0, 0)] * leaf.ndim
+                pad[seq_ax] = (0, max_len - cur)
+                return jnp.pad(leaf, pad)
+        return leaf
+    return jax.tree_util.tree_map_with_path(grow, cache)

@@ -1,0 +1,109 @@
+"""Train-step factory: CE loss (+ MoE aux), gradient accumulation, optional
+int8-compressed data-parallel gradient reduction, AdamW update.
+
+The returned function is pure; callers jit it with explicit in/out shardings
+(see launch/dryrun.py and launch/train.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.optim import adamw
+
+
+def make_loss_fn(cfg: ModelConfig):
+    def loss_fn(params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        logits, aux, _ = M.forward(params, cfg, batch, mode="train")
+        labels = batch["labels"]
+        # keep the (B,S,V) logits in bf16: gather the gold logit first, then
+        # let the f32 cast fuse into the logsumexp reduction — the full-f32
+        # logits tensor is never materialized (EXPERIMENTS.md §Perf,
+        # gemma it-3: ~2x less bytes through the largest activation).
+        gold = jnp.take_along_axis(logits, labels[..., None],
+                                   axis=-1)[..., 0].astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        ce = jnp.mean(logz - gold)
+        loss = ce + aux
+        return loss, {"loss": loss, "ce": ce, "aux_loss": aux}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig,
+                    opt_cfg: adamw.OptimizerConfig,
+                    *,
+                    accum_steps: int = 1,
+                    grad_compression: Optional[str] = None,
+                    mesh=None,
+                    dp_axes: Tuple[str, ...] = ()):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    accum_steps > 1: the global batch is split into microbatches along dim 0
+    and gradients accumulate in fp32 through a lax.scan.
+    grad_compression='int8': gradients cross the data-parallel axes as int8
+    (per-leaf symmetric scaling) via an explicit shard_map reduction.
+    """
+    loss_fn = make_loss_fn(cfg)
+    grad_fn = jax.grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if accum_steps == 1:
+            return grad_fn(params, batch)
+        B = batch["tokens"].shape[0] if "tokens" in batch else \
+            batch["embeds"].shape[0]
+        mb = B // accum_steps
+
+        def slice_mb(i, t):
+            if t.ndim and t.shape[0] == B:
+                return jax.lax.dynamic_slice_in_dim(t, i * mb, mb, axis=0)
+            if t.ndim >= 2 and t.shape[0] == 3 and t.shape[1] == B:  # mrope pos
+                return jax.lax.dynamic_slice_in_dim(t, i * mb, mb, axis=1)
+            return t
+
+        def body(carry, i):
+            acc, metrics_acc = carry
+            micro = {k: slice_mb(i, v) for k, v in batch.items()}
+            g, m = grad_fn(params, micro)
+            acc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32), acc, g)
+            metrics_acc = jax.tree.map(lambda a, x: a + x, metrics_acc, m)
+            return (acc, metrics_acc), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        m0 = {"loss": jnp.zeros(()), "ce": jnp.zeros(()),
+              "aux_loss": jnp.zeros(())}
+        (grads, metrics), _ = jax.lax.scan(body, (zeros, m0),
+                                           jnp.arange(accum_steps))
+        grads = jax.tree.map(lambda g: g / accum_steps, grads)
+        metrics = jax.tree.map(lambda x: x / accum_steps, metrics)
+        return grads, metrics
+
+    if grad_compression == "int8":
+        # local-grads path: explicit int8 psum over the DP axes replaces the
+        # implicit fp32 gradient all-reduce (see distributed/compression.py).
+        from repro.distributed.compression import make_local_grad_fn
+        assert mesh is not None and dp_axes, "int8 compression needs mesh+dp_axes"
+        batch_dim_map = {"positions": 1} if cfg.rope_kind == "mrope" else {}
+        compute_grads = make_local_grad_fn(loss_fn, mesh, dp_axes,
+                                           batch_dim_map, compress=True)
+
+    def train_step(params, opt_state, batch):
+        grads, metrics = compute_grads(params, batch)
+        new_params, new_opt, om = adamw.update(opt_cfg, opt_state, grads, params)
+        metrics.update(om)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    loss_fn = make_loss_fn(cfg)
+
+    def eval_step(params, batch):
+        _, metrics = loss_fn(params, batch)
+        return metrics
+    return eval_step

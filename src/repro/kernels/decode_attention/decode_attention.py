@@ -1,0 +1,103 @@
+"""Single-token decode attention (flash-decode style) as a Pallas TPU kernel.
+
+One query position per sequence attends to a long KV cache with a dynamic
+valid length. Grid (batch, q_heads, kv_blocks): kv blocks stream through VMEM
+innermost with online-softmax statistics in scratch (the TPU analogue of
+split-KV: the sequential grid walks KV partitions without rematerializing
+them; cache stays in HBM and is block-DMA'd). The valid cache length arrives
+as a scalar-prefetch operand so out-of-range blocks are masked (and the
+kernel does no work past the last valid block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, scale: float, block_k: int):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+    valid = len_ref[0]
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(ik * block_k < valid)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)                 # (1, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        col = ik * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (1, block_k), 1)
+        s = jnp.where(col < valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "block_k", "interpret"))
+def decode_attention_bhd(q, k, v, valid_len, *, scale: float,
+                         block_k: int = 512, interpret: bool = False):
+    """q (B, H, 1, hd), k/v (B, KV, S, hd), valid_len scalar int32
+    -> (B, H, 1, hd)."""
+    B, H, _, hd = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    G = H // KV
+    block_k = min(block_k, S)
+    pad = (-S) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    Sk = S + pad
+    lens = jnp.asarray(valid_len, jnp.int32).reshape(1)
+    grid = (B, H, Sk // block_k)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, hd), lambda b, h, ik, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, ik, lens, G=G: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, ik, lens, G=G: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd),
+                               lambda b, h, ik, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, block_k=block_k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, hd), q.dtype),
+        interpret=interpret,
+    )(lens, q, k, v)
+    return out

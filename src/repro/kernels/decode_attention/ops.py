@@ -1,0 +1,27 @@
+"""Jit-facing wrapper: model layout (B, 1, H, hd) + cache (B, S, KV, hd)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .decode_attention import decode_attention_bhd
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "use_pallas",
+                                             "interpret", "block_k"))
+def decode_attention(q, k_cache, v_cache, valid_len, *, scale: float,
+                     use_pallas: bool = True, interpret: bool = False,
+                     block_k: int = 512):
+    """q (B, 1, H, hd), caches (B, S, KV, hd) -> (B, 1, H, hd)."""
+    qt = jnp.swapaxes(q, 1, 2)                    # (B, H, 1, hd)
+    kt = jnp.swapaxes(k_cache, 1, 2)              # (B, KV, S, hd)
+    vt = jnp.swapaxes(v_cache, 1, 2)
+    if use_pallas:
+        ot = decode_attention_bhd(qt, kt, vt, valid_len, scale=scale,
+                                  block_k=block_k, interpret=interpret)
+    else:
+        ot = ref.decode_attention_ref(qt, kt, vt, valid_len, scale=scale)
+    return jnp.swapaxes(ot, 1, 2)

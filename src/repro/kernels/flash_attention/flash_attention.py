@@ -1,0 +1,121 @@
+"""Causal GQA flash attention as a Pallas TPU kernel.
+
+Tiling: grid (batch, q_heads, q_blocks, kv_blocks) with the kv dimension
+innermost/sequential; online-softmax statistics (m, l) and the f32 output
+accumulator live in VMEM scratch and persist across kv iterations. Block
+shapes are MXU-aligned (block_q x head_dim and block_k x head_dim tiles,
+128-multiples by default). Causal skipping: kv blocks strictly above the
+diagonal are not computed (pl.when), so the work is ~S^2/2 like the math.
+
+GQA is expressed in the k/v index_map (kv head = q head // group), so no
+repeated-KV materialization ever happens.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int, causal: bool,
+                  seq_len: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_last = iq * block_q + block_q - 1
+    should_run = (ik * block_k <= q_last) if causal else True
+
+    @pl.when(should_run)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)                # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        row = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_k), 0)
+        col = ik * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_k), 1)
+        mask = col < seq_len
+        if causal:
+            mask = mask & (col <= row)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                                # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    last_k = jnp.minimum(nk - 1, q_last // block_k) if causal else nk - 1
+
+    @pl.when(ik == last_k)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "causal", "block_q", "block_k",
+                              "interpret"))
+def flash_attention_bhsd(q, k, v, *, scale: float, causal: bool = True,
+                         block_q: int = 128, block_k: int = 128,
+                         interpret: bool = False):
+    """q (B, H, S, hd), k/v (B, KV, S, hd) -> (B, H, S, hd)."""
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    pad_q = (-S) % block_q
+    pad_k = (-S) % block_k
+    Sq, Sk = S + pad_q, S + pad_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    grid = (B, H, Sq // block_q, Sk // block_k)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, block_q=block_q,
+                          block_k=block_k, causal=causal, seq_len=S),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik, G=G: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik, G=G: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :S, :]

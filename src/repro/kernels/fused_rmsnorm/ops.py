@@ -1,0 +1,16 @@
+"""Jit wrapper for fused_rmsnorm with jnp fallback."""
+import functools
+
+import jax
+
+from . import ref
+from .fused_rmsnorm import fused_rmsnorm as _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "use_pallas",
+                                             "interpret"))
+def rmsnorm(x, w, *, eps: float = 1e-6, use_pallas: bool = True,
+            interpret: bool = False):
+    if use_pallas:
+        return _kernel(x, w, eps=eps, interpret=interpret)
+    return ref.rmsnorm_ref(x, w, eps=eps)

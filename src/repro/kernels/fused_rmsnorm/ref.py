@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for fused_rmsnorm."""
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, w, *, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)
+            * (1.0 + w.astype(jnp.float32))).astype(x.dtype)

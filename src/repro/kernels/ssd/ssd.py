@@ -1,0 +1,131 @@
+"""Mamba2 SSD chunked scan as a Pallas TPU kernel (arXiv:2405.21060 §6,
+re-tiled for TPU).
+
+Grid (batch, heads, chunks) with chunks innermost/sequential: the running
+state (P x N, f32) lives in VMEM scratch and carries across chunk iterations
+(the inter-chunk linear recurrence), while each iteration computes the
+intra-chunk "quasi-attention" term on the MXU:
+
+    att = (C B^T) * exp(cum_i - cum_j) * dt_j   (L x L, causal-masked)
+    y   = att @ x + (C * exp(cum)) @ state^T
+    state = exp(cum_L) * state + x^T (decay_to_end * dt * B)
+
+Chunk length L and state width N are MXU-aligned (256/128 by default); the
+decay/cumsum math is f32 throughout. The B/C group mapping (head -> group)
+is expressed in the index_map, so grouped B/C are never materialized per
+head in HBM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hf_ref, state_scr,
+                *, chunk: int, n_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)            # (L, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)          # (L, 1)
+    A = a_ref[0].astype(jnp.float32)               # scalar (per head)
+    B = b_ref[0, 0].astype(jnp.float32)            # (L, N)
+    C = c_ref[0, 0].astype(jnp.float32)            # (L, N)
+
+    L = chunk
+    dA = dt * A                                    # (L, 1), negative
+    cum = jnp.cumsum(dA, axis=0)                   # (L, 1)
+
+    # ---- intra-chunk quasi-attention ---------------------------------------
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (L, L)
+    decay = jnp.exp(cum - cum.reshape(1, L))       # exp(cum_i - cum_j)
+    row = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    att = jnp.where(row >= col, cb * decay, 0.0) * dt.reshape(1, L)
+    y = jax.lax.dot_general(att, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)    # (L, P)
+
+    # ---- inter-chunk contribution from the carried state --------------------
+    state = state_scr[...]                         # (P, N)
+    c_scaled = C * jnp.exp(cum)                    # (L, N)
+    y = y + jax.lax.dot_general(c_scaled, state, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # ---- state update ---------------------------------------------------------
+    gamma = jnp.exp(cum[L - 1])                    # scalar-ish (1,)
+    decay_to_end = jnp.exp(cum[L - 1].reshape(1, 1) - cum)         # (L, 1)
+    xw = x * (decay_to_end * dt)                   # (L, P)
+    new_state = state * gamma + jax.lax.dot_general(
+        xw, B, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)        # (P, N)
+    state_scr[...] = new_state
+
+    @pl.when(ic == n_chunks - 1)
+    def _emit_state():
+        hf_ref[0, 0] = new_state
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_pallas(x, dt, A, Bm, Cm, *, chunk: int = 256,
+               interpret: bool = False,
+               h0: Optional[jnp.ndarray] = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Shapes as kernels/ssd/ref.py. h0 must be None (training path)."""
+    assert h0 is None, "ssd_pallas: initial state not supported (use ref)"
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # pad dt with zeros -> exp(0*A)=1, B=0: padding is a no-op for state
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // L
+    grp = H // G
+
+    # kernel-friendly layouts: (B, H|G, nc*L, ...) with heads outside seq
+    xt = jnp.swapaxes(x, 1, 2)                      # (B, H, Sp, P)
+    dtt = jnp.swapaxes(dt, 1, 2)[..., None]         # (B, H, Sp, 1)
+    Bt = jnp.swapaxes(Bm, 1, 2)                     # (B, G, Sp, N)
+    Ct = jnp.swapaxes(Cm, 1, 2)
+    Af = A.astype(jnp.float32)
+
+    y, h_final = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=L, n_chunks=nc),
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, L, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, L, 1), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, 1, L, N),
+                         lambda b, h, c, grp=grp: (b, h // grp, c, 0)),
+            pl.BlockSpec((1, 1, L, N),
+                         lambda b, h, c, grp=grp: (b, h // grp, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, L, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Sp, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, Af, Bt, Ct)
+
+    y = jnp.swapaxes(y, 1, 2)[:, :S]                # (B, S, H, P)
+    return y, h_final

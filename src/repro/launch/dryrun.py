@@ -1,0 +1,290 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST be the very first lines, before ANY other import: jax locks the
+#   device count on first init. Run as `python -m repro.launch.dryrun ...`.
+#
+# Multi-pod dry-run: lower + compile every (architecture x input-shape x mesh)
+# cell with production shardings; record memory analysis, cost analysis, and
+# the collective schedule for the roofline table.
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch gemma-7b --shape train_4k --mesh single
+#   python -m repro.launch.dryrun --sweep --out results/dryrun.json
+
+import argparse
+import gc
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, cell_is_runnable, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as SH
+from repro.distributed.serve_step import make_decode_step, make_prefill_step
+from repro.distributed.train_step import make_train_step
+from repro.launch import roofline as RL
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.optim.adamw import OptimizerConfig
+
+
+def _sharded(mesh, tree_sds, tree_spec):
+    """Attach shardings to ShapeDtypeStructs (so .lower sees the placement)."""
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                          sharding=NamedSharding(mesh, p)),
+        tree_sds, tree_spec)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               cfg_overrides: Optional[Dict[str, Any]] = None):
+    """Build and lower the cell's step function. Returns (lowered, meta)."""
+    cfg = get_config(arch, **(cfg_overrides or {}))
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_runnable(cfg, shape)
+    if not ok:
+        return None, {"skipped": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    dp_axes = SH.batch_axes(mesh, cfg)
+
+    params_sds = SP.params_struct(cfg)
+    p_spec = SH.params_pspec(cfg, mesh, params_sds)
+    params_in = _sharded(mesh, params_sds, p_spec)
+
+    if shape.kind == "train":
+        opt_sds = SP.opt_state_struct(params_sds)
+        o_spec = SH.opt_state_pspec(cfg, mesh, opt_sds)
+        opt_in = _sharded(mesh, opt_sds, o_spec)
+        batch_sds = SP.train_input_specs(cfg, shape)
+        bp = SH.batch_pspec(cfg, mesh, shape.global_batch)
+        b_spec = {k: bp[k] for k in batch_sds}
+        batch_in = _sharded(mesh, batch_sds, b_spec)
+        step = make_train_step(cfg, OptimizerConfig(), mesh=mesh,
+                               dp_axes=dp_axes)
+        jitted = jax.jit(
+            step,
+            in_shardings=(jax.tree.map(lambda s: s.sharding, params_in),
+                          jax.tree.map(lambda s: s.sharding, opt_in),
+                          jax.tree.map(lambda s: s.sharding, batch_in)),
+            out_shardings=(jax.tree.map(lambda s: s.sharding, params_in),
+                           jax.tree.map(lambda s: s.sharding, opt_in),
+                           None),
+            donate_argnums=(0, 1))
+        with mesh:
+            lowered = jitted.lower(params_in, opt_in, batch_in)
+
+    elif shape.kind == "prefill":
+        batch_sds = SP.prefill_input_specs(cfg, shape)
+        bp = SH.batch_pspec(cfg, mesh, shape.global_batch)
+        b_spec = {k: bp[k] for k in batch_sds}
+        batch_in = _sharded(mesh, batch_sds, b_spec)
+        step = make_prefill_step(cfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(jax.tree.map(lambda s: s.sharding, params_in),
+                          jax.tree.map(lambda s: s.sharding, batch_in)),
+            out_shardings=None)
+        with mesh:
+            lowered = jitted.lower(params_in, batch_in)
+
+    else:                                            # decode
+        batch_sds, cache_sds = SP.decode_input_specs(cfg, shape)
+        c_spec = SH.cache_pspec(cfg, mesh, shape.global_batch)
+        cache_in = _sharded(mesh, cache_sds, c_spec)
+        axes = SH.batch_axes(mesh, cfg, shape.global_batch)
+        bax = axes if axes else None
+        b_spec = {}
+        for k in batch_sds:
+            if k == "positions" and cfg.rope_kind == "mrope":
+                b_spec[k] = P(None, bax, None)
+            elif k == "embeds":
+                b_spec[k] = P(bax, None, None)
+            else:
+                b_spec[k] = P(bax, None)
+        batch_in = _sharded(mesh, batch_sds, b_spec)
+        step = make_decode_step(cfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(jax.tree.map(lambda s: s.sharding, params_in),
+                          jax.tree.map(lambda s: s.sharding, batch_in),
+                          jax.tree.map(lambda s: s.sharding, cache_in)),
+            out_shardings=(None,
+                           jax.tree.map(lambda s: s.sharding, cache_in)),
+            donate_argnums=(2,))
+        with mesh:
+            lowered = jitted.lower(params_in, batch_in, cache_in)
+
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "multi_pod" if multi_pod else "single_pod",
+            "n_devices": n_dev, "cfg": cfg, "shape_cfg": shape}
+    return lowered, meta
+
+
+def _compile_cell(arch, shape_name, multi_pod, cfg_overrides,
+                  want_collectives: bool):
+    """Lower+compile once; return (record_or_error, costs_dict)."""
+    t0 = time.time()
+    lowered, meta = lower_cell(arch, shape_name, multi_pod, cfg_overrides)
+    if lowered is None:
+        return {"status": "skipped", "why": meta["skipped"]}, None
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {k: getattr(mem, k) for k in
+                 ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes")
+                 if hasattr(mem, k)}
+    except Exception:
+        mem_d = {}
+    costs = {"flops": float(cost.get("flops", 0.0)),
+             "bytes accessed": float(cost.get("bytes accessed", 0.0))}
+    if want_collectives:
+        coll = RL.parse_collective_bytes(compiled.as_text())
+        for k, v in coll.items():
+            costs[f"coll_{k}"] = float(v)
+    rec = {"lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+           "memory": mem_d, "meta": meta}
+    del compiled, lowered
+    gc.collect()
+    return rec, costs
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             cfg_overrides: Optional[Dict[str, Any]] = None,
+             verbose: bool = True, extrapolate_depth: bool = True
+             ) -> Dict[str, Any]:
+    """Full cell record: scanned production compile (memory proof) + two
+    small-depth unrolled probe compiles -> affine-extrapolated roofline."""
+    from repro.launch import costmodel as CM
+    mesh_name = "multi_pod" if multi_pod else "single_pod"
+    base = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    overrides = dict(cfg_overrides or {})
+    try:
+        scanned, scanned_costs = _compile_cell(
+            arch, shape_name, multi_pod, overrides,
+            want_collectives=not extrapolate_depth)
+    except Exception as e:
+        return {**base, "status": "compile_error",
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:]}
+    if scanned.get("status") == "skipped":
+        return {**base, "status": "skipped", "why": scanned["why"]}
+    meta = scanned.pop("meta")
+    cfg, shape_cfg, n_dev = meta["cfg"], meta["shape_cfg"], meta["n_devices"]
+
+    if extrapolate_depth:
+        ov_a, ov_b, n_a, n_b, n_t = CM.probe_depths(cfg)
+        try:
+            rec_a, costs_a = _compile_cell(arch, shape_name, multi_pod,
+                                           {**overrides, **ov_a},
+                                           want_collectives=True)
+            rec_b, costs_b = _compile_cell(arch, shape_name, multi_pod,
+                                           {**overrides, **ov_b},
+                                           want_collectives=True)
+        except Exception as e:
+            return {**base, "status": "probe_error",
+                    "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]}
+        costs = CM.extrapolate(costs_a, costs_b, n_a, n_b, n_t)
+        probe_s = rec_a["compile_s"] + rec_b["compile_s"]
+    else:
+        costs = scanned_costs
+        probe_s = 0.0
+
+    coll = {k[5:]: v for k, v in costs.items() if k.startswith("coll_")}
+    coll.setdefault("total", sum(v for k, v in coll.items()
+                                 if k not in ("total", "count")))
+    terms = RL.derive(arch, shape_cfg, cfg, mesh_name, n_dev,
+                      {"flops": costs.get("flops", 0.0),
+                       "bytes accessed": costs.get("bytes accessed", 0.0)},
+                      coll,
+                      peak_bytes_dev=scanned["memory"].get("temp_size_in_bytes"))
+    rec = {**base, "status": "ok", "n_devices": n_dev,
+           "compile_s": scanned["compile_s"], "probe_compile_s": probe_s,
+           "memory": scanned["memory"],
+           "cost": {"flops": costs.get("flops"),
+                    "bytes accessed": costs.get("bytes accessed")},
+           "collectives": {k: round(v) for k, v in coll.items()},
+           "roofline": terms.to_dict()}
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: "
+              f"compile {scanned['compile_s']:.1f}s+{probe_s:.1f}s  "
+              f"compute {terms.compute_s*1e3:.2f}ms  "
+              f"memory {terms.memory_s*1e3:.2f}ms  "
+              f"coll {terms.collective_s*1e3:.2f}ms  "
+              f"-> {terms.bottleneck}  hw_frac={terms.hw_frac:.3f}  "
+              f"useful={terms.useful_ratio:.2f}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells already in --out")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (repeatable); "
+                         "values parsed as python literals where possible")
+    args = ap.parse_args()
+
+    overrides = {}
+    import ast
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            overrides[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            overrides[k] = v
+
+    if not args.sweep:
+        rec = run_cell(args.arch, args.shape, args.mesh == "multi",
+                       cfg_overrides=overrides or None)
+        print(json.dumps(rec, indent=2, default=str))
+        if rec["status"] in ("lower_error", "compile_error"):
+            raise SystemExit(1)
+        return
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    done = set()
+    if args.resume and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+        done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+                if r["status"] in ("ok", "skipped")}
+    n_err = 0
+    for mesh_name in ("single_pod", "multi_pod"):
+        for arch in ARCH_IDS:
+            for shape_name in SHAPES:
+                key = (arch, shape_name, mesh_name)
+                if key in done:
+                    continue
+                rec = run_cell(arch, shape_name, mesh_name == "multi_pod")
+                results = [r for r in results
+                           if (r["arch"], r["shape"], r["mesh"]) != key]
+                results.append(rec)
+                if rec["status"] in ("lower_error", "compile_error"):
+                    n_err += 1
+                    print(f"[dryrun] ERROR {key}: {rec['error']}", flush=True)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1, default=str)
+    print(f"[dryrun] sweep done: {len(results)} cells, {n_err} errors",
+          flush=True)
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

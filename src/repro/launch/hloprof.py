@@ -1,0 +1,120 @@
+"""HLO-text profiler for dry-run hillclimbing: attributes flops to dot /
+convolution ops and bytes to collectives, grouped by shape signature — the
+"profile" used in the hypothesis -> change -> measure loop (no real-TPU
+timings exist on this container, per the methodology in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "s32": 4,
+                "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+                "pred": 1}
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*([a-z0-9]+)\[([\d,]*)\]")
+_DOT_RE = re.compile(
+    r"=\s*[a-z0-9]+\[([\d,]*)\][^=]*?\bdot\(\s*%?([\w.\-]+),\s*%?([\w.\-]+)\)"
+    r".*?lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _parse_shape(dims: str) -> Tuple[int, ...]:
+    return tuple(int(d) for d in dims.split(",") if d)
+
+
+def _numel(shape: Tuple[int, ...]) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def build_symbol_table(hlo: str) -> Dict[str, Tuple[str, Tuple[int, ...]]]:
+    table = {}
+    for line in hlo.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            table[m.group(1)] = (m.group(2), _parse_shape(m.group(3)))
+    return table
+
+
+def dot_flops(hlo: str) -> List[Dict]:
+    """Per-dot flop attribution: 2 * numel(out) * contracted_dim."""
+    table = build_symbol_table(hlo)
+    out = []
+    for line in hlo.splitlines():
+        if " dot(" not in line:
+            continue
+        m = _DOT_RE.search(line)
+        if not m:
+            continue
+        out_shape = _parse_shape(m.group(1))
+        lhs = table.get(m.group(2))
+        contract = [int(d) for d in m.group(4).split(",") if d]
+        k = 1
+        if lhs:
+            for d in contract:
+                if d < len(lhs[1]):
+                    k *= lhs[1][d]
+        out.append({"out_shape": out_shape, "k": k,
+                    "flops": 2 * _numel(out_shape) * k,
+                    "line": line.strip()[:160]})
+    return out
+
+
+def top_dots(hlo: str, n: int = 15) -> List[Dict]:
+    """Top flop contributors grouped by (out_shape, k)."""
+    groups: Dict[Tuple, Dict] = defaultdict(lambda: {"flops": 0, "count": 0})
+    for d in dot_flops(hlo):
+        g = groups[(d["out_shape"], d["k"])]
+        g["flops"] += d["flops"]
+        g["count"] += 1
+        g["example"] = d["line"]
+    rows = [{"out_shape": k[0], "contract_k": k[1], **v}
+            for k, v in groups.items()]
+    rows.sort(key=lambda r: -r["flops"])
+    return rows[:n]
+
+
+def collective_report(hlo: str, n: int = 15) -> List[Dict]:
+    """Collectives grouped by (kind, shape), result bytes."""
+    kinds = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+    shape_re = re.compile(r"=\s*\(?([a-z0-9]+)\[([\d,]*)\]")
+    groups: Dict[Tuple, Dict] = defaultdict(lambda: {"bytes": 0, "count": 0})
+    for line in hlo.splitlines():
+        for kind in kinds:
+            if f" {kind}(" in line or f" {kind}-start(" in line:
+                m = shape_re.search(line)
+                if not m:
+                    continue
+                dt, dims = m.group(1), _parse_shape(m.group(2))
+                b = _numel(dims) * _DTYPE_BYTES.get(dt, 4)
+                g = groups[(kind, dt, dims)]
+                g["bytes"] += b
+                g["count"] += 1
+                break
+    rows = [{"kind": k[0], "dtype": k[1], "shape": k[2], **v}
+            for k, v in groups.items()]
+    rows.sort(key=lambda r: -r["bytes"])
+    return rows[:n]
+
+
+def profile_cell(arch: str, shape: str, multi_pod: bool = False,
+                 cfg_overrides=None, depth_override: int = 2) -> Dict:
+    """Compile a small-depth unrolled probe of a cell and return the top
+    compute/collective contributors (per layer + fixed)."""
+    from repro.launch.dryrun import lower_cell
+    from repro.launch.costmodel import probe_depths
+    from repro.configs import get_config
+    cfg = get_config(arch, **(cfg_overrides or {}))
+    ov_a, _, _, _, _ = probe_depths(cfg)
+    ov = {**(cfg_overrides or {}), **ov_a}
+    lowered, meta = lower_cell(arch, shape, multi_pod, ov)
+    compiled = lowered.compile()
+    hlo = compiled.as_text()
+    return {"top_dots": top_dots(hlo),
+            "collectives": collective_report(hlo),
+            "cost": dict(compiled.cost_analysis() or {}),
+            "n_layers_probe": ov.get("num_layers")}

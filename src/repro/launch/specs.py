@@ -1,0 +1,80 @@
+"""ShapeDtypeStruct stand-ins for every model input of every (arch x shape)
+cell — weak-type-correct, shardable, zero device allocation. Used by the
+multi-pod dry-run and the roofline harness."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _pos_struct(cfg: ModelConfig, B: int, S: int) -> jax.ShapeDtypeStruct:
+    if cfg.rope_kind == "mrope":
+        return jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+    return jax.ShapeDtypeStruct((B, S), jnp.int32)
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "positions": _pos_struct(cfg, B, S),
+    }
+    if cfg.input_mode == "embeddings":
+        # modality frontend stub: precomputed frame/patch embeddings
+        batch["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return batch
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"positions": _pos_struct(cfg, B, S)}
+    if cfg.input_mode == "embeddings":
+        batch["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig
+                       ) -> Tuple[Dict[str, Any], Any]:
+    """(batch struct, cache struct). Cache capacity = shape.seq_len; the step
+    appends token #seq_len (index = seq_len - 1 entries already present)."""
+    from repro.models.model import init_cache
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"positions": _pos_struct(cfg, B, 1)}
+    if cfg.input_mode == "embeddings":
+        batch["embeds"] = jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    return batch, cache
+
+
+def params_struct(cfg: ModelConfig):
+    from repro.models.model import init_params
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: init_params(k, cfg), key)
+
+
+def opt_state_struct(params_sds):
+    from repro.optim import adamw
+    return jax.eval_shape(adamw.init, params_sds)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """The full input pytree for the cell's step function."""
+    if shape.kind == "train":
+        params = params_struct(cfg)
+        return {"params": params, "opt_state": opt_state_struct(params),
+                "batch": train_input_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"params": params_struct(cfg),
+                "batch": prefill_input_specs(cfg, shape)}
+    batch, cache = decode_input_specs(cfg, shape)
+    return {"params": params_struct(cfg), "batch": batch, "cache": cache}

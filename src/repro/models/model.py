@@ -1,0 +1,411 @@
+"""The unified decoder-LM trunk covering all 10 assigned architectures.
+
+One functional model, four families of layer stack:
+  * dense / audio / vlm : [norm→attn, norm→mlp] × L, scanned
+  * moe                 : optional leading dense layers + [norm→attn, norm→moe] × L
+  * ssm                 : [norm→mamba2] × L, scanned
+  * hybrid (zamba2)     : groups of ``attn_every`` mamba2 layers, each followed by
+                          ONE weight-shared attention+MLP block; scanned over groups
+
+Layers are stacked (leading L dim) and executed with ``lax.scan`` so the HLO
+stays small at 512-device SPMD compiles; ``cfg.remat`` selects the activation
+checkpoint policy applied to the scanned body.
+
+Modes: ``forward(..., mode='train')`` full logits; ``mode='prefill'`` last-token
+logits + filled caches; ``decode(...)`` single-token step against caches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+
+Params = Dict[str, Any]
+
+
+# ===================================================================== helpers
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_saveable)
+    return jax.checkpoint(fn)
+
+
+def _scan(cfg: ModelConfig, body, carry, xs):
+    """lax.scan over stacked layers, or an unrolled python loop when
+    ``cfg.scan_layers=False`` (the dry-run uses unrolled HLO so that
+    cost_analysis sees true trip counts; see launch/dryrun.py)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = jax.tree.map(lambda t: t[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and jax.tree.leaves(ys[0]):
+        ys = jax.tree.map(lambda *ts: jnp.stack(ts), *ys)
+    else:
+        ys = ys[0] if ys else None
+    return carry, ys
+
+
+def _split_stack(key, n: int):
+    return jax.random.split(key, n)
+
+
+def _hybrid_layout(cfg: ModelConfig) -> Tuple[int, int]:
+    """(#full groups of ``attn_every`` ssm layers, #tail ssm layers)."""
+    g = cfg.num_layers // cfg.attn_every
+    return g, cfg.num_layers - g * cfg.attn_every
+
+
+# ================================================================ block: dense
+def init_dense_block(key, cfg: ModelConfig, dtype, *, use_moe: bool, d_ff: int):
+    k1, k2 = jax.random.split(key)
+    p = {"norm1": L.init_rmsnorm(cfg.d_model, dtype),
+         "norm2": L.init_rmsnorm(cfg.d_model, dtype)}
+    p["attn"] = (attn.init_mla(k1, cfg, dtype) if cfg.use_mla
+                 else attn.init_gqa(k1, cfg, dtype))
+    if use_moe:
+        p["moe"] = moe_lib.init_moe(k2, cfg, dtype)
+    else:
+        import dataclasses
+        mcfg = cfg if d_ff == cfg.d_ff else dataclasses.replace(cfg, d_ff=d_ff)
+        p["mlp"] = L.init_mlp(k2, mcfg, d_ff, dtype)
+    return p
+
+
+def dense_block_full(p, x, cfg: ModelConfig, positions, *, use_moe: bool,
+                     return_kv: bool):
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if cfg.use_mla:
+        h, kv = attn.mla_full(p["attn"], h, cfg, positions, return_kv=return_kv)
+    else:
+        h, kv = attn.gqa_full(p["attn"], h, cfg, positions, return_kv=return_kv)
+    x = x + h
+    h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+    if use_moe:
+        h, aux = moe_lib.moe_apply(p["moe"], h, cfg)
+    else:
+        h, aux = L.mlp(p["mlp"], h, cfg), jnp.zeros((), jnp.float32)
+    return x + h, kv, aux
+
+
+def dense_block_decode(p, x, cfg: ModelConfig, positions, cache, index, *,
+                       use_moe: bool):
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if cfg.use_mla:
+        h, c1, c2 = attn.mla_decode(p["attn"], h, cfg, positions,
+                                    cache["c_kv"], cache["k_rope"], index)
+        new_cache = {"c_kv": c1, "k_rope": c2}
+    else:
+        h, ck, cv = attn.gqa_decode(p["attn"], h, cfg, positions,
+                                    cache["k"], cache["v"], index)
+        new_cache = {"k": ck, "v": cv}
+    x = x + h
+    h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+    if use_moe:
+        h, _ = moe_lib.moe_apply(p["moe"], h, cfg)
+    else:
+        h = L.mlp(p["mlp"], h, cfg)
+    return x + h, new_cache
+
+
+# ================================================================== block: ssm
+def init_ssm_block(key, cfg: ModelConfig, dtype):
+    return {"norm1": L.init_rmsnorm(cfg.d_model, dtype),
+            "ssm": ssm_lib.init_mamba2(key, cfg, dtype)}
+
+
+def ssm_block_full(p, x, cfg: ModelConfig, *, return_cache: bool):
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    h, cache = ssm_lib.mamba2_full(p["ssm"], h, cfg, return_cache=return_cache)
+    return x + h, cache
+
+
+def ssm_block_decode(p, x, cfg: ModelConfig, cache):
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    h, new_cache = ssm_lib.mamba2_decode(p["ssm"], h, cfg, cache)
+    return x + h, new_cache
+
+
+# ====================================================================== params
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    k_embed, k_layers, k_extra, k_head = jax.random.split(key, 4)
+    params: Params = {
+        "embed": L.init_embedding(k_embed, cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": L.init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.init_linear(k_head, cfg.d_model, cfg.padded_vocab,
+                                          dtype)
+    fam = cfg.family
+    if fam == "ssm":
+        params["layers"] = jax.vmap(
+            lambda k: init_ssm_block(k, cfg, dtype))(
+                _split_stack(k_layers, cfg.num_layers))
+    elif fam == "hybrid":
+        n_groups, tail = _hybrid_layout(cfg)
+        keys = _split_stack(k_layers, n_groups * cfg.attn_every).reshape(
+            n_groups, cfg.attn_every, 2)
+        params["ssm_groups"] = jax.vmap(jax.vmap(
+            lambda k: init_ssm_block(k, cfg, dtype)))(keys)
+        if tail:
+            params["ssm_tail"] = jax.vmap(
+                lambda k: init_ssm_block(k, cfg, dtype))(
+                    _split_stack(jax.random.fold_in(k_layers, 1), tail))
+        params["shared_attn"] = init_dense_block(
+            k_extra, cfg, dtype, use_moe=False, d_ff=cfg.d_ff)
+    elif fam == "moe":
+        fd = cfg.first_dense_layers
+        if fd:
+            params["dense_layers"] = jax.vmap(
+                lambda k: init_dense_block(k, cfg, dtype, use_moe=False,
+                                           d_ff=cfg.d_ff))(
+                    _split_stack(k_extra, fd))
+        params["layers"] = jax.vmap(
+            lambda k: init_dense_block(k, cfg, dtype, use_moe=True,
+                                       d_ff=cfg.d_ff))(
+                _split_stack(k_layers, cfg.num_layers - fd))
+    else:
+        params["layers"] = jax.vmap(
+            lambda k: init_dense_block(k, cfg, dtype, use_moe=False,
+                                       d_ff=cfg.d_ff))(
+                _split_stack(k_layers, cfg.num_layers))
+    return params
+
+
+# ======================================================================= cache
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    """Preallocated decoding caches (stacked over layers), plus ``index``."""
+    dtype = jnp.dtype(cfg.dtype)
+    fam = cfg.family
+
+    def gqa_cache(n_layers):
+        if cfg.use_mla:
+            return {"c_kv": jnp.zeros((n_layers, batch, max_len,
+                                       cfg.kv_lora_rank), dtype),
+                    "k_rope": jnp.zeros((n_layers, batch, max_len,
+                                         cfg.qk_rope_head_dim), dtype)}
+        return {"k": jnp.zeros((n_layers, batch, max_len, cfg.num_kv_heads,
+                                cfg.head_dim), dtype),
+                "v": jnp.zeros((n_layers, batch, max_len, cfg.num_kv_heads,
+                                cfg.head_dim), dtype)}
+
+    def ssm_cache(n_layers):
+        K, di, G, N = cfg.ssm_conv, cfg.ssm_d_inner, cfg.ssm_groups, cfg.ssm_state
+        H, P = cfg.ssm_heads, cfg.ssm_head_dim
+        return {"conv_x": jnp.zeros((n_layers, batch, K - 1, di), dtype),
+                "conv_B": jnp.zeros((n_layers, batch, K - 1, G * N), dtype),
+                "conv_C": jnp.zeros((n_layers, batch, K - 1, G * N), dtype),
+                "state": jnp.zeros((n_layers, batch, H, P, N), jnp.float32)}
+
+    cache: Dict[str, Any] = {"index": jnp.zeros((), jnp.int32)}
+    if fam == "ssm":
+        cache["layers"] = ssm_cache(cfg.num_layers)
+    elif fam == "hybrid":
+        n_groups, tail = _hybrid_layout(cfg)
+        cache["ssm_groups"] = jax.tree.map(
+            lambda t: t.reshape((n_groups, cfg.attn_every) + t.shape[1:]),
+            ssm_cache(n_groups * cfg.attn_every))
+        if tail:
+            cache["ssm_tail"] = ssm_cache(tail)
+        cache["attn"] = gqa_cache(n_groups)
+    elif fam == "moe" and cfg.first_dense_layers:
+        cache["dense_layers"] = gqa_cache(cfg.first_dense_layers)
+        cache["layers"] = gqa_cache(cfg.num_layers - cfg.first_dense_layers)
+    else:
+        cache["layers"] = gqa_cache(cfg.num_layers)
+    return cache
+
+
+# ===================================================================== forward
+def _inputs_to_h(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
+    if cfg.input_mode == "embeddings" and "embeds" in batch:
+        x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    else:
+        x = L.embed(params["embed"], batch["tokens"], cfg)
+    if cfg.pos_embed == "sinusoidal":
+        pos = batch["positions"]
+        x = x + L.sinusoidal_pos_embed(pos, cfg.d_model, x.dtype)
+    return x
+
+
+def _logits(params, cfg: ModelConfig, x):
+    if cfg.tie_embeddings:
+        return L.unembed(params["embed"], x, cfg)
+    return L.unembed(params["unembed"], x, cfg)
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            *, mode: str = "train"
+            ) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[Dict[str, Any]]]:
+    """Full-sequence forward.
+
+    mode='train':   returns (logits (B,S,V), aux_loss, None)
+    mode='prefill': returns (last-token logits (B,1,V), aux_loss, cache)
+    """
+    assert mode in ("train", "prefill")
+    prefill = mode == "prefill"
+    positions = batch["positions"]
+    x = _inputs_to_h(params, cfg, batch)
+    aux_total = jnp.zeros((), jnp.float32)
+    caches: Dict[str, Any] = {}
+    fam = cfg.family
+
+    if fam == "ssm":
+        def body(carry, lp):
+            y, cache = ssm_block_full(lp, carry, cfg, return_cache=prefill)
+            return y, cache
+        x, cache = _scan(cfg, _remat(cfg, body), x, params["layers"])
+        if prefill:
+            caches["layers"] = cache
+
+    elif fam == "hybrid":
+        n_groups, tail = _hybrid_layout(cfg)
+        shared = params["shared_attn"]
+
+        def grp_body(carry, grp_params):
+            y = carry
+            def inner(c, lp):
+                out, cache = ssm_block_full(lp, c, cfg, return_cache=prefill)
+                return out, cache
+            y, ssm_c = _scan(cfg, _remat(cfg, inner), y, grp_params)
+            y, kv, _ = dense_block_full(shared, y, cfg, positions,
+                                        use_moe=False, return_kv=prefill)
+            return y, (ssm_c, kv)
+        x, (ssm_caches, kvs) = _scan(cfg, grp_body, x, params["ssm_groups"])
+        if tail:
+            def t_body(c, lp):
+                out, cache = ssm_block_full(lp, c, cfg, return_cache=prefill)
+                return out, cache
+            x, tail_c = _scan(cfg, _remat(cfg, t_body), x, params["ssm_tail"])
+        if prefill:
+            caches["ssm_groups"] = ssm_caches
+            if tail:
+                caches["ssm_tail"] = tail_c
+            caches["attn"] = {"k": kvs[0], "v": kvs[1]}
+
+    else:                                   # dense / moe / audio / vlm
+        fd = cfg.first_dense_layers if fam == "moe" else 0
+        if fd:
+            def d_body(carry, lp):
+                y, kv, _ = dense_block_full(lp, carry, cfg, positions,
+                                            use_moe=False, return_kv=prefill)
+                return y, kv
+            x, kvs = _scan(cfg, _remat(cfg, d_body), x,
+                                  params["dense_layers"])
+            if prefill:
+                caches["dense_layers"] = _kv_dict(cfg, kvs)
+
+        use_moe = fam == "moe"
+        def body(carry, lp):
+            y, aux = carry
+            y, kv, a = dense_block_full(lp, y, cfg, positions,
+                                        use_moe=use_moe, return_kv=prefill)
+            return (y, aux + a), kv
+        (x, aux_total), kvs = _scan(
+            cfg, _remat(cfg, body), (x, aux_total), params["layers"])
+        if prefill:
+            caches["layers"] = _kv_dict(cfg, kvs)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if prefill:
+        x = x[:, -1:, :]
+        caches["index"] = jnp.asarray(batch["positions"].shape[-1], jnp.int32)
+    logits = _logits(params, cfg, x)
+    return logits, aux_total, (caches if prefill else None)
+
+
+def _kv_dict(cfg, kvs):
+    if kvs is None:
+        return None
+    if cfg.use_mla:
+        return {"c_kv": kvs[0], "k_rope": kvs[1]}
+    return {"k": kvs[0], "v": kvs[1]}
+
+
+# ====================================================================== decode
+def decode(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+           cache: Dict[str, Any]
+           ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """One decode step. batch: tokens (B,1) or embeds (B,1,d) + positions.
+
+    Returns (logits (B,1,V), new_cache)."""
+    index = cache["index"]
+    positions = batch["positions"]
+    x = _inputs_to_h(params, cfg, batch)
+    new_cache: Dict[str, Any] = {"index": index + 1}
+    fam = cfg.family
+
+    if fam == "ssm":
+        def body(carry, xs):
+            lp, lc = xs
+            y, nc = ssm_block_decode(lp, carry, cfg, lc)
+            return y, nc
+        x, nc = _scan(cfg, body, x, (params["layers"], cache["layers"]))
+        new_cache["layers"] = nc
+
+    elif fam == "hybrid":
+        n_groups, tail = _hybrid_layout(cfg)
+        shared = params["shared_attn"]
+
+        def grp_body(carry, xs):
+            grp_params, grp_ssm_cache, attn_c = xs
+            y = carry
+            def inner(c, xs2):
+                lp, lc = xs2
+                out, ncache = ssm_block_decode(lp, c, cfg, lc)
+                return out, ncache
+            y, ssm_nc = _scan(cfg, inner, y, (grp_params, grp_ssm_cache))
+            y, attn_nc = dense_block_decode(shared, y, cfg, positions, attn_c,
+                                            index, use_moe=False)
+            return y, (ssm_nc, attn_nc)
+        x, (ssm_nc, attn_nc) = _scan(
+            cfg, grp_body, x,
+            (params["ssm_groups"], cache["ssm_groups"], cache["attn"]))
+        new_cache["ssm_groups"] = ssm_nc
+        new_cache["attn"] = attn_nc
+        if tail:
+            def t_body(c, xs2):
+                lp, lc = xs2
+                out, ncache = ssm_block_decode(lp, c, cfg, lc)
+                return out, ncache
+            x, tail_nc = _scan(cfg, t_body, x,
+                                      (params["ssm_tail"], cache["ssm_tail"]))
+            new_cache["ssm_tail"] = tail_nc
+
+    else:
+        fd = cfg.first_dense_layers if fam == "moe" else 0
+        if fd:
+            def d_body(carry, xs):
+                lp, lc = xs
+                y, nc = dense_block_decode(lp, carry, cfg, positions, lc, index,
+                                           use_moe=False)
+                return y, nc
+            x, nc = _scan(cfg, d_body, x,
+                                 (params["dense_layers"], cache["dense_layers"]))
+            new_cache["dense_layers"] = nc
+        use_moe = fam == "moe"
+        def body(carry, xs):
+            lp, lc = xs
+            y, nc = dense_block_decode(lp, carry, cfg, positions, lc, index,
+                                       use_moe=use_moe)
+            return y, nc
+        x, nc = _scan(cfg, body, x, (params["layers"], cache["layers"]))
+        new_cache["layers"] = nc
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _logits(params, cfg, x)
+    return logits, new_cache

@@ -1,0 +1,89 @@
+"""AdamW with decoupled weight decay, global-norm clipping and a
+warmup+cosine schedule. Pure functions over pytrees (no optax dependency);
+moments are fp32 regardless of param dtype (mixed-precision master-moment
+convention), which composes with ZeRO-1 sharding of the moment trees.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray          # scalar int32
+    mu: Any                    # first moment (fp32 pytree)
+    nu: Any                    # second moment (fp32 pytree)
+
+
+def init(params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    mu=jax.tree.map(zeros, params),
+                    nu=jax.tree.map(zeros, params))
+
+
+def schedule(cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(1, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(math.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay for norms, biases, and 1-D params."""
+    name = str(path[-1].key) if hasattr(path[-1], "key") else str(path[-1])
+    return name not in ("scale", "b", "A_log", "D", "dt_bias")
+
+
+def update(cfg: OptimizerConfig, state: OptState, grads, params
+           ) -> Tuple[Any, OptState, Dict[str, jnp.ndarray]]:
+    grads32, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    b1, b2 = cfg.betas
+    step = state.step + 1
+    lr = schedule(cfg, state.step)
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads32)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                      state.nu, grads32)
+
+    def step_fn(path, p, m, v):
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if _decay_mask(path):
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map_with_path(step_fn, params, mu, nu)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(step=step, mu=mu, nu=nu), metrics

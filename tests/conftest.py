@@ -1,0 +1,37 @@
+"""Shared fixtures. NOTE: no XLA device-count flags here — tests must see the
+real single CPU device (only launch/dryrun.py forces 512 placeholder
+devices, in its own process)."""
+import os
+
+import jax
+import pytest
+
+# keep hypothesis + jax quiet and deterministic
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+def make_positions(cfg, B, S, start=0):
+    import jax.numpy as jnp
+    base = start + jnp.arange(S, dtype=jnp.int32)
+    if cfg.rope_kind == "mrope":
+        return jnp.broadcast_to(base[None, None], (3, B, S))
+    return jnp.broadcast_to(base[None], (B, S))
+
+
+def make_batch(cfg, key, B, S, with_labels=True):
+    import jax
+    import jax.numpy as jnp
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size,
+                                dtype=jnp.int32)
+    batch = {"tokens": tokens, "positions": make_positions(cfg, B, S)}
+    if with_labels:
+        batch["labels"] = jnp.roll(tokens, -1, axis=1)
+    if cfg.input_mode == "embeddings":
+        batch["embeds"] = jax.random.normal(key, (B, S, cfg.d_model),
+                                            jnp.float32)
+    return batch

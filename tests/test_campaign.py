@@ -1,0 +1,94 @@
+"""Campaign engine + IMPECCABLE workload: DAG ordering, adaptive sizing,
+paper-scale behaviour (makespan reduction, utilization ordering)."""
+import pytest
+
+from repro.core.agent import Agent, SimEngine
+from repro.core.analytics import compute_metrics
+from repro.core.campaign import Campaign, Stage
+from repro.core.impeccable import make_impeccable_stages, run_impeccable
+from repro.core.task import TaskDescription, TaskState
+
+
+def test_stage_dependencies_respected():
+    eng = SimEngine()
+    agent = Agent(eng, 4, {"flux": {}})
+    agent.start()
+    stages = [
+        Stage("a", lambda ctx: [TaskDescription(cores=1, duration=10.0)
+                                for _ in range(5)]),
+        Stage("b", lambda ctx: [TaskDescription(cores=1, duration=10.0)
+                                for _ in range(5)], depends_on=["a"]),
+        Stage("c", lambda ctx: [TaskDescription(cores=1, duration=5.0)],
+              depends_on=["a", "b"]),
+    ]
+    camp = Campaign(agent, stages)
+    camp.start()
+    agent.run_until_complete()
+    assert camp.complete
+    end_a = max(t.timestamps["DONE"] for t in camp.stage_tasks["a"])
+    start_b = min(t.timestamps["RUNNING"] for t in camp.stage_tasks["b"])
+    end_b = max(t.timestamps["DONE"] for t in camp.stage_tasks["b"])
+    start_c = min(t.timestamps["RUNNING"] for t in camp.stage_tasks["c"])
+    assert start_b >= end_a
+    assert start_c >= end_b
+
+
+def test_diamond_dag_runs_once():
+    eng = SimEngine()
+    agent = Agent(eng, 4, {"flux": {}})
+    agent.start()
+    counter = {"d": 0}
+
+    def mk_d(ctx):
+        counter["d"] += 1
+        return [TaskDescription(cores=1, duration=1.0)]
+
+    stages = [
+        Stage("a", lambda ctx: [TaskDescription(cores=1, duration=1.0)]),
+        Stage("b", lambda ctx: [TaskDescription(cores=1, duration=2.0)],
+              depends_on=["a"]),
+        Stage("c", lambda ctx: [TaskDescription(cores=1, duration=3.0)],
+              depends_on=["a"]),
+        Stage("d", mk_d, depends_on=["b", "c"]),
+    ]
+    camp = Campaign(agent, stages)
+    camp.start()
+    agent.run_until_complete()
+    assert camp.complete and counter["d"] == 1
+
+
+def test_impeccable_task_counts_scale_with_nodes():
+    s256 = make_impeccable_stages(256, iterations=1)
+    s1024 = make_impeccable_stages(1024, iterations=1)
+    assert len(s256) == len(s1024)                 # same structure
+    # count via a dry agent run at tiny duration
+    agent, camp = run_impeccable("flux", 256, iterations=1)
+    n256 = len(camp.all_tasks())
+    agent, camp = run_impeccable("flux", 1024, iterations=1)
+    n1024 = len(camp.all_tasks())
+    assert n1024 > 3 * n256                        # adaptive scaling
+    assert n256 >= 102 * 2                         # >=102 tasks per 128 nodes
+
+
+@pytest.mark.slow
+def test_impeccable_flux_beats_srun_at_scale():
+    """Paper §4.2: flux reduces makespan 30-60% vs srun on 1024 nodes and
+    srun's utilization collapses with scale."""
+    a_srun, c_srun = run_impeccable("srun", 1024, iterations=2, seed=3)
+    a_flux, c_flux = run_impeccable("flux", 1024, iterations=2, seed=3)
+    m_srun = compute_metrics(c_srun.all_tasks(), a_srun.total_cores)
+    m_flux = compute_metrics(c_flux.all_tasks(), a_flux.total_cores)
+    reduction = 1.0 - m_flux.makespan / m_srun.makespan
+    assert reduction > 0.25, f"makespan reduction only {reduction:.0%}"
+    assert m_flux.utilization > m_srun.utilization
+    assert m_flux.throughput_avg > 1.5 * m_srun.throughput_avg
+
+
+@pytest.mark.slow
+def test_impeccable_srun_degrades_with_scale():
+    a256, c256 = run_impeccable("srun", 256, iterations=2, seed=3)
+    a1024, c1024 = run_impeccable("srun", 1024, iterations=2, seed=3)
+    m256 = compute_metrics(c256.all_tasks(), a256.total_cores)
+    m1024 = compute_metrics(c1024.all_tasks(), a1024.total_cores)
+    assert m1024.makespan > 1.3 * m256.makespan    # paper: 26000 -> 44000 s
+    assert m1024.utilization < m256.utilization    # paper: 30% -> 15%

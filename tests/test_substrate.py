@@ -1,0 +1,183 @@
+"""Substrate: optimizer, data pipeline, checkpointing, local runtime."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.core.local import LocalRuntime
+from repro.core.task import TaskDescription, TaskState
+from repro.data.pipeline import (DataConfig, PrefetchingLoader,
+                                 SyntheticTokenStream, make_loader)
+from repro.optim import adamw
+
+
+# ------------------------------------------------------------------ optimizer
+def test_adamw_optimizes_quadratic():
+    cfg = adamw.OptimizerConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                                total_steps=200, clip_norm=10.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = adamw.init(params)
+    loss = lambda p: jnp.sum(jnp.square(p["w"]))
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw.update(cfg, state, g, params)
+    assert loss(params) < 1e-2
+
+
+def test_adamw_grad_clipping():
+    g = {"w": jnp.array([3e6, 4e6])}
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 5e6) / 5e6 < 1e-5
+    assert abs(float(jnp.linalg.norm(clipped["w"])) - 1.0) < 1e-4
+
+
+def test_adamw_schedule_shape():
+    cfg = adamw.OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                                min_lr_ratio=0.1)
+    lrs = [float(adamw.schedule(cfg, jnp.asarray(s))) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0           # warmup
+    assert lrs[99] < lrs[50] < lrs[11]      # cosine decay
+    assert lrs[99] >= 0.1 * 0.99            # floor
+
+
+def test_decay_mask_excludes_norms():
+    cfg = adamw.OptimizerConfig(lr=0.0, weight_decay=1.0)
+    params = {"norm": {"scale": jnp.ones(4)}, "lin": {"w": jnp.ones(4)}}
+    state = adamw.init(params)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    new, _, _ = adamw.update(cfg, state, zeros, params)
+    assert jnp.allclose(new["norm"]["scale"], 1.0)   # no decay on norm
+
+
+# ----------------------------------------------------------------------- data
+def test_data_deterministic_and_resumable():
+    cfg = get_smoke_config("stablelm-3b")
+    dcfg = DataConfig(seq_len=16, global_batch=4, seed=9)
+    s1 = make_loader(cfg, dcfg)
+    b0, b1 = next(s1), next(s1)
+    s2 = make_loader(cfg, dcfg)
+    s2.load_state_dict({"step": 1, "seed": 9})
+    b1b = next(s2)
+    np.testing.assert_array_equal(b1["tokens"], b1b["tokens"])
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+def test_data_hosts_get_disjoint_rows():
+    cfg = get_smoke_config("stablelm-3b")
+    full = next(make_loader(cfg, DataConfig(seq_len=8, global_batch=4,
+                                            seed=5, n_hosts=1, host_id=0)))
+    h0 = next(make_loader(cfg, DataConfig(seq_len=8, global_batch=4,
+                                          seed=5, n_hosts=2, host_id=0)))
+    h1 = next(make_loader(cfg, DataConfig(seq_len=8, global_batch=4,
+                                          seed=5, n_hosts=2, host_id=1)))
+    assert h0["tokens"].shape[0] == 2 and h1["tokens"].shape[0] == 2
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_prefetch_preserves_stream():
+    cfg = get_smoke_config("stablelm-3b")
+    dcfg = DataConfig(seq_len=8, global_batch=2, seed=3)
+    direct = make_loader(cfg, dcfg)
+    want = [next(direct)["tokens"] for _ in range(4)]
+    pref = PrefetchingLoader(iter(make_loader(cfg, dcfg)), depth=2)
+    got = [next(pref)["tokens"] for _ in range(4)]
+    pref.close()
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_mrope_positions_shape():
+    cfg = get_smoke_config("qwen2-vl-7b")
+    b = next(make_loader(cfg, DataConfig(seq_len=8, global_batch=2)))
+    assert b["positions"].shape == (3, 2, 8)
+    assert "embeds" in b                       # vlm stub frontend
+
+
+# ----------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    state = {"params": {"w": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3),
+                        "b": jnp.ones(3, jnp.float32)},
+             "step_count": jnp.asarray(7, jnp.int32)}
+    mgr.save(7, state)
+    out = mgr.restore(template=state)
+    assert out["step"] == 7
+    got = out["tree"]
+    assert got["params"]["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(got["params"]["w"],
+                                             dtype=np.float32),
+                                  np.asarray(state["params"]["w"],
+                                             dtype=np.float32))
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"x": jnp.zeros(2)})
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_async_then_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    mgr.save(1, {"x": jnp.full((4,), 3.0)})
+    mgr.wait()
+    out = mgr.restore(template={"x": jnp.zeros(4)})
+    np.testing.assert_allclose(np.asarray(out["tree"]["x"]), 3.0)
+
+
+# -------------------------------------------------------------- local runtime
+def test_local_runtime_runs_functions():
+    rt = LocalRuntime(n_function_workers=2)
+    results = []
+    descs = [TaskDescription(kind="function", fn=lambda i=i: i * i)
+             for i in range(8)]
+    tasks = rt.submit(descs)
+    assert rt.wait(timeout=30)
+    assert sorted(t.result for t in tasks) == [i * i for i in range(8)]
+    assert all(t.state == TaskState.DONE for t in tasks)
+    rt.shutdown()
+
+
+def test_local_runtime_retries_then_succeeds():
+    attempts = {"n": 0}
+
+    def flaky():
+        attempts["n"] += 1
+        if attempts["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    rt = LocalRuntime(n_function_workers=1)
+    tasks = rt.submit([TaskDescription(kind="function", fn=flaky,
+                                       max_retries=3)])
+    assert rt.wait(timeout=30)
+    assert tasks[0].state == TaskState.DONE and tasks[0].result == "ok"
+    rt.shutdown()
+
+
+def test_local_runtime_executables_coscheduled():
+    import threading
+    concurrent = {"now": 0, "peak": 0}
+    lock = threading.Lock()
+
+    def job():
+        with lock:
+            concurrent["now"] += 1
+            concurrent["peak"] = max(concurrent["peak"], concurrent["now"])
+        import time
+        time.sleep(0.05)
+        with lock:
+            concurrent["now"] -= 1
+
+    rt = LocalRuntime(n_function_workers=2, n_partitions=2)
+    tasks = rt.submit([TaskDescription(kind="executable", fn=job)
+                       for _ in range(6)])
+    assert rt.wait(timeout=30)
+    assert all(t.state == TaskState.DONE for t in tasks)
+    assert concurrent["peak"] <= 2            # one job per partition at a time
+    rt.shutdown()
