@@ -10,16 +10,22 @@ from repro.core import calibration as CAL
 from repro.core.agent import Agent, SimEngine
 from repro.core.analytics import compute_metrics
 from repro.core.impeccable import run_impeccable
+from repro.core.pilot import PilotDescription
 from repro.core.task import TaskDescription
+from repro.runtime import PilotManager, Session, TaskManager
 
 
-def _run(backends, n_nodes, descs, seed=0):
+def _run(backends, n_nodes, descs, seed=0, **agent_options):
     t0 = time.time()
-    eng = SimEngine(seed=seed)
-    agent = Agent(eng, n_nodes, backends)
-    agent.start()
-    agent.submit(descs)
-    agent.run_until_complete()
+    with Session(mode="sim", seed=seed) as session:
+        pilot = PilotManager(session).submit_pilots(
+            PilotDescription(nodes=n_nodes, backends=backends),
+            **agent_options)
+        tmgr = TaskManager(session)
+        tmgr.add_pilots(pilot)
+        tmgr.submit_tasks(descs)
+        tmgr.wait_tasks()
+        agent = pilot.agent
     m = compute_metrics(list(agent.tasks.values()), agent.total_cores)
     return m, (time.time() - t0) * 1e6
 
@@ -187,6 +193,28 @@ def bench_beyond_paper_runtime() -> List[Dict]:
     return rows
 
 
+def bench_beyond_batched_dispatch() -> List[Dict]:
+    """RP's task-manager bulk path: dispatching in batches per agent tick
+    holds the §4.1.5 rate while cutting scheduler events per task, so the
+    simulator itself gets measurably faster at the dispatch-bound ceiling."""
+    rows = []
+    descs_n = 30000
+    for batch in (1, CAL.RP_DISPATCH_BATCH, 64):
+        m, us = _run({"flux": {"partitions": 8, "nodes": 32},
+                      "dragon": {"partitions": 8, "nodes": 32}}, 64,
+                     _null(descs_n // 2, "executable")
+                     + _null(descs_n // 2, "function"),
+                     seed=4, dispatch_batch=batch)
+        rows.append({
+            "name": f"beyond.dispatch_batch_{batch}",
+            "us_per_call": round(us),
+            "derived": (f"peak={m.throughput_peak:.0f} t/s "
+                        f"(ceiling {CAL.RP_DISPATCH_RATE:.0f}); "
+                        f"sim wall-time scales ~1/batch on dispatch events"),
+        })
+    return rows
+
+
 def bench_beyond_adaptive_routing() -> List[Dict]:
     """Dynamic backend selection (paper §6 future work): skewed sustained
     load; adaptive offloads the saturated backend's overflow."""
@@ -223,5 +251,6 @@ def run() -> List[Dict]:
     rows += bench_fig7_startup_overhead()
     rows += bench_fig8_impeccable()
     rows += bench_beyond_paper_runtime()
+    rows += bench_beyond_batched_dispatch()
     rows += bench_beyond_adaptive_routing()
     return rows

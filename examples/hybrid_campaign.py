@@ -8,6 +8,9 @@ executes on this host through the middleware:
   * surrogate inference -> JAX serve steps as function tasks,
   * selection      -> feedback: inference scores pick the next docking batch.
 
+Drives the RP-style Session API with a real (wall-clock) engine: the same
+pipeline a simulated campaign runs on, but every task payload executes here.
+
 Run:  PYTHONPATH=src python examples/hybrid_campaign.py [--iterations 2]
 """
 import argparse
@@ -18,7 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.core import LocalRuntime, TaskDescription
+from repro.core import (PilotDescription, PilotManager, Session,
+                        TaskDescription, TaskManager)
 from repro.distributed.train_step import make_train_step
 from repro.models import model as M
 from repro.optim import adamw
@@ -39,7 +43,12 @@ def main():
     step = jax.jit(make_train_step(cfg, adamw.OptimizerConfig(
         total_steps=64, warmup_steps=2)))
 
-    rt = LocalRuntime(n_function_workers=4, n_partitions=1)
+    session = Session(mode="real")
+    pilot = PilotManager(session).submit_pilots(PilotDescription(
+        nodes=1, backends={"dragon": {"workers": 4},
+                           "flux": {"partitions": 1}}))
+    tmgr = TaskManager(session)
+    tmgr.add_pilots(pilot)
     rng = np.random.default_rng(0)
     candidates = rng.standard_normal((args.docking_batch, 8))
 
@@ -73,26 +82,29 @@ def main():
     t0 = time.time()
     for it in range(args.iterations):
         # stage 1: docking fan-out (dragon modality)
-        dock_tasks = rt.submit([
+        dock_tasks = tmgr.submit_tasks([
             TaskDescription(kind="function", fn=docking, args=(m,),
                             stage="docking") for m in candidates])
-        rt.wait(timeout=300)
+        if not tmgr.wait_tasks(dock_tasks, timeout=300):
+            raise TimeoutError("docking stage exceeded 300s")
         scores = np.asarray([t.result for t in dock_tasks])
 
         # stage 2: surrogate training (flux modality, co-scheduled)
         toks = (np.abs(candidates @ rng.standard_normal((8, 32))) * 100
                 ).astype(np.int32) % cfg.vocab_size
-        train_tasks = rt.submit([TaskDescription(
+        train_task_h = tmgr.submit_tasks(TaskDescription(
             kind="executable", coupling="tight", fn=train_task,
-            args=(toks,), stage="sst_train")])
-        rt.wait(timeout=600)
-        loss = train_tasks[0].result
+            args=(toks,), stage="sst_train"))
+        if not tmgr.wait_tasks([train_task_h], timeout=600):
+            raise TimeoutError("sst_train stage exceeded 600s")
+        loss = train_task_h.result
 
         # stage 3: surrogate inference + adaptive selection
-        inf_tasks = rt.submit([TaskDescription(
+        inf_task = tmgr.submit_tasks(TaskDescription(
             kind="function", fn=inference, args=(scores,),
-            stage="inference")])
-        rt.wait(timeout=300)
+            stage="inference"))
+        if not tmgr.wait_tasks([inf_task], timeout=300):
+            raise TimeoutError("inference stage exceeded 300s")
         pick = np.argsort(scores)[: args.docking_batch // 2]
         candidates = np.concatenate(
             [candidates[pick],
@@ -101,11 +113,12 @@ def main():
               f"(best {scores.min():.3f}), sst loss {loss:.3f}, "
               f"selected {len(pick)} for refinement")
 
-    n = len(rt.tasks)
-    done = sum(t.state.value == "DONE" for t in rt.tasks.values())
+    all_tasks = pilot.agent.tasks
+    n = len(all_tasks)
+    done = sum(t.state.value == "DONE" for t in all_tasks.values())
     print(f"[campaign] complete: {done}/{n} tasks in {time.time()-t0:.1f}s; "
-          f"backends: {sorted({t.backend for t in rt.tasks.values()})}")
-    rt.shutdown()
+          f"backends: {sorted({t.backend for t in all_tasks.values()})}")
+    session.close()
 
 
 if __name__ == "__main__":

@@ -2,30 +2,58 @@
 execution framework (RADICAL-Pilot + Flux + Dragon, SC-W'25).
 
 Public surface:
-    SimEngine, Agent, RoutingPolicy      — discrete-event agent (paper scale)
-    LocalRuntime                          — real execution (threads + submeshes)
+    SimEngine, RealEngine, Engine         — pluggable execution substrate
+    Agent, RoutingPolicy                  — backend-agnostic dispatch pipeline
+    Session, PilotManager, TaskManager    — RP-style top-level API
+    LocalRuntime                          — compat shim over Session(mode="real")
     Task, TaskDescription, TaskState      — task state machine
     Pilot, PilotDescription, PilotState   — pilot state machine
     Campaign, Stage                       — workflow-of-workflows engine
     make_impeccable_stages, run_impeccable
     compute_metrics, concurrency_series   — paper metrics from event traces
-"""
-from repro.core.agent import (AdaptiveRoutingPolicy, Agent,
-                              RoutingPolicy, SimEngine)
-from repro.core.analytics import (RunMetrics, compute_metrics,
-                                  concurrency_series)
-from repro.core.campaign import Campaign, Stage, StageContext
-from repro.core.impeccable import make_impeccable_stages, run_impeccable
-from repro.core.local import LocalRuntime
-from repro.core.pilot import Pilot, PilotDescription, PilotState
-from repro.core.task import Task, TaskDescription, TaskState
 
-__all__ = [
-    "Agent", "AdaptiveRoutingPolicy", "RoutingPolicy", "SimEngine",
-    "LocalRuntime",
-    "Task", "TaskDescription", "TaskState",
-    "Pilot", "PilotDescription", "PilotState",
-    "Campaign", "Stage", "StageContext",
-    "make_impeccable_stages", "run_impeccable",
-    "RunMetrics", "compute_metrics", "concurrency_series",
-]
+Attributes resolve lazily (PEP 562): ``repro.core`` and ``repro.runtime``
+import each other across layers, and deferring the submodule imports keeps
+either entry point cycle-free.
+"""
+import importlib
+
+_EXPORTS = {
+    "Agent": "repro.core.agent",
+    "AdaptiveRoutingPolicy": "repro.core.agent",
+    "RoutingPolicy": "repro.core.agent",
+    "SimEngine": "repro.runtime.engine",
+    "RealEngine": "repro.runtime.engine",
+    "Engine": "repro.runtime.engine",
+    "Session": "repro.runtime.session",
+    "PilotManager": "repro.runtime.session",
+    "TaskManager": "repro.runtime.session",
+    "LocalRuntime": "repro.core.local",
+    "Task": "repro.core.task",
+    "TaskDescription": "repro.core.task",
+    "TaskState": "repro.core.task",
+    "Pilot": "repro.core.pilot",
+    "PilotDescription": "repro.core.pilot",
+    "PilotState": "repro.core.pilot",
+    "Campaign": "repro.core.campaign",
+    "Stage": "repro.core.campaign",
+    "StageContext": "repro.core.campaign",
+    "make_impeccable_stages": "repro.core.impeccable",
+    "run_impeccable": "repro.core.impeccable",
+    "RunMetrics": "repro.core.analytics",
+    "compute_metrics": "repro.core.analytics",
+    "concurrency_series": "repro.core.analytics",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    return getattr(importlib.import_module(mod), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

@@ -2,71 +2,36 @@
 runtime backends concurrently, routes tasks by execution model, and handles
 retries / failover / stragglers (§3).
 
-``SimEngine`` is the discrete-event substrate (virtual clock + seeded noise +
-platform-level srun slot accounting). The agent's dispatch pipeline is itself
-a service queue (RP's task-management subsystem, ~1600 tasks/s ceiling —
-§4.1.5), so end-to-end throughput saturates exactly where the paper measures
-it.
+The agent is engine-agnostic: it talks to an abstract ``Engine`` (clock +
+scheduler + profiler + RNG — see ``repro.runtime.engine``), so the same
+dispatch pipeline drives the discrete-event ``SimEngine`` (paper-scale
+simulation) and the wall-clock ``RealEngine`` (payloads execute on this
+host). Backends are resolved through ``repro.runtime.registry``; registering
+a new executor requires no edits here.
+
+The agent's dispatch pipeline is itself a service queue (RP's
+task-management subsystem, ~1600 tasks/s ceiling — §4.1.5) and dispatches in
+bulk per tick (RP's task-manager bulk path), so end-to-end throughput
+saturates exactly where the paper measures it while the simulator spends
+O(1/batch) events per task on dispatch.
 """
 from __future__ import annotations
 
-import math
-import random
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.core import calibration as CAL
-from repro.core.events import Profiler
 from repro.core.executors.base import BaseExecutor
-from repro.core.executors.dragon import SimDragonExecutor
-from repro.core.executors.flux import SimFluxExecutor
-from repro.core.executors.srun import SimSrunExecutor
 from repro.core.resources import NodeSpec
-from repro.core.simclock import VirtualClock
 from repro.core.task import Task, TaskDescription, TaskState
-
-
-class SimEngine:
-    """Shared simulation state: clock, trace, seeded noise, srun slots."""
-
-    def __init__(self, seed: int = 0,
-                 srun_cap: int = CAL.SRUN_CONCURRENCY_CAP):
-        self.clock = VirtualClock()
-        self.profiler = Profiler()
-        self.rng = random.Random(seed)
-        self.srun_cap = srun_cap
-        self._srun_used = 0
-        self.duration_fn: Optional[Callable[[Task], float]] = None
-
-    def now(self) -> float:
-        return self.clock.now()
-
-    def noisy(self, mean: float, sigma: float = 0.0) -> float:
-        if sigma <= 0:
-            return mean
-        return mean * math.exp(self.rng.gauss(0.0, sigma))
-
-    def actual_duration(self, task: Task) -> float:
-        if self.duration_fn is not None:
-            return max(0.0, self.duration_fn(task))
-        return task.description.duration
-
-    # --- platform srun slot accounting (Frontier cap, §4.1.1) ---------------
-    @property
-    def srun_slots_free(self) -> int:
-        return self.srun_cap - self._srun_used
-
-    def take_srun_slot(self):
-        assert self._srun_used < self.srun_cap, "srun cap violated"
-        self._srun_used += 1
-
-    def release_srun_slot(self):
-        self._srun_used = max(0, self._srun_used - 1)
+from repro.runtime.engine import Engine, RealEngine, SimEngine  # noqa: F401
+from repro.runtime.registry import create_executor
 
 
 class RoutingPolicy:
     """Task-type-aware backend selection (§3.1): explicit override first,
-    then modality/coupling match, then fallback order."""
+    then modality/coupling match, then fallback order, then any backend
+    that accepts the task (covers registry-added custom backends)."""
 
     def __init__(self, order=("flux", "dragon", "srun")):
         self.order = order
@@ -75,6 +40,8 @@ class RoutingPolicy:
         d = task.description
         if d.backend and d.backend in backends:
             return d.backend
+        if d.executable and "popen" in backends:
+            return "popen"
         if d.kind == "function" and "dragon" in backends:
             return "dragon"
         if (d.nodes or d.coupling == "tight"):
@@ -83,6 +50,9 @@ class RoutingPolicy:
                     return name
         for name in self.order:
             if name in backends and backends[name].accepts(task):
+                return name
+        for name, ex in backends.items():
+            if ex.accepts(task):
                 return name
         raise RuntimeError(f"no backend accepts task {task.uid}")
 
@@ -112,18 +82,6 @@ class AdaptiveRoutingPolicy(RoutingPolicy):
         prev = self._rate.get(backend, inst)
         self._rate[backend] = (1 - self.ewma) * prev + self.ewma * inst
 
-    def _queue_depth(self, ex: BaseExecutor) -> int:
-        servers = getattr(ex, "instances", None)
-        if servers is None:
-            servers = [ex.server]
-        seen = set()
-        depth = 0
-        for s in servers:
-            if id(s.queue) not in seen:       # shared backlogs counted once
-                seen.add(id(s.queue))
-                depth += len(s.queue)
-        return depth
-
     def route(self, task: Task, backends: Dict[str, BaseExecutor]) -> str:
         d = task.description
         if (d.backend or d.nodes or d.coupling == "tight"
@@ -143,8 +101,7 @@ class AdaptiveRoutingPolicy(RoutingPolicy):
                 # service-model rate (refined online by the EWMA)
                 nominal = getattr(ex, "nominal_rate", None)
                 rate = nominal() if nominal is not None else 1.0
-            depth = self._queue_depth(ex)
-            est = depth / max(rate, 1e-9)
+            est = ex.queue_depth / max(rate, 1e-9)
             if name == default:
                 est *= 0.99          # tie-break toward the modality match
             return est
@@ -153,14 +110,15 @@ class AdaptiveRoutingPolicy(RoutingPolicy):
 
 
 class Agent:
-    """Pilot agent running over a SimEngine."""
+    """Pilot agent running over an Engine (simulated or real)."""
 
-    def __init__(self, engine: SimEngine, n_nodes: int,
+    def __init__(self, engine: Engine, n_nodes: int,
                  backends: Dict[str, Dict[str, Any]],
                  node_spec: NodeSpec = NodeSpec(cores=CAL.CORES_PER_NODE,
                                                 gpus=CAL.GPUS_PER_NODE),
                  policy: Optional[RoutingPolicy] = None,
                  dispatch_rate: float = CAL.RP_DISPATCH_RATE,
+                 dispatch_batch: int = CAL.RP_DISPATCH_BATCH,
                  speculation: bool = False,
                  speculation_factor: float = 3.0):
         self.engine = engine
@@ -168,6 +126,7 @@ class Agent:
         self.node_spec = node_spec
         self.policy = policy or RoutingPolicy()
         self.dispatch_interval = 1.0 / dispatch_rate
+        self.dispatch_batch = max(1, dispatch_batch)
         self.speculation = speculation
         self.speculation_factor = speculation_factor
 
@@ -175,6 +134,7 @@ class Agent:
         self._dispatch_q: deque = deque()
         self._dispatch_busy = False
         self._n_terminal = 0
+        self.ready_at = 0.0
         self.on_task_done: Optional[Callable[[Task], None]] = None
         self._spec_watch: Dict[str, Any] = {}
         self._spec_clones: Dict[str, Task] = {}
@@ -190,17 +150,10 @@ class Agent:
         share = ((self.n_nodes - assigned) // len(unassigned)
                  if unassigned else 0)
         for name, c in cfg.items():
-            nodes = c.get("nodes", share)
-            if name == "srun":
-                ex = SimSrunExecutor(self.engine, nodes, self.node_spec)
-            elif name == "flux":
-                ex = SimFluxExecutor(self.engine, nodes,
-                                     c.get("partitions", 1), self.node_spec)
-            elif name == "dragon":
-                ex = SimDragonExecutor(self.engine, nodes,
-                                       c.get("partitions", 1), self.node_spec)
-            else:
-                raise KeyError(name)
+            options = dict(c)
+            nodes = options.pop("nodes", share)
+            ex = create_executor(name, self.engine, nodes=nodes,
+                                 spec=self.node_spec, **options)
             ex.on_complete = self._task_completed
             ex.on_failure = self._task_failed
             self.backends[name] = ex
@@ -211,7 +164,7 @@ class Agent:
         self.engine.profiler.record(t0, "agent", "agent:start", {})
         for name, ex in self.backends.items():
             overhead = ex.start()
-            ex.ready_at = t0 + CAL.AGENT_STARTUP_S + overhead
+            ex.ready_at = t0 + self.engine.startup_overhead_s + overhead
             self.engine.profiler.record(ex.ready_at, name, "executor:ready",
                                         {"overhead": overhead})
         self.ready_at = max(ex.ready_at for ex in self.backends.values())
@@ -219,43 +172,50 @@ class Agent:
     # ---------------------------------------------------------------- submit
     def submit(self, descriptions: List[TaskDescription]) -> List[Task]:
         out = []
-        for d in descriptions:
-            task = Task(d)
-            self.tasks[task.uid] = task
-            task.advance(TaskState.SCHEDULING, self.engine.now(),
-                         self.engine.profiler)
-            self._dispatch_q.append(task)
-            out.append(task)
-        self._pump_dispatch()
+        with self.engine.lock:
+            for d in descriptions:
+                task = Task(d)
+                self.tasks[task.uid] = task
+                task.advance(TaskState.SCHEDULING, self.engine.now(),
+                             self.engine.profiler)
+                self._dispatch_q.append(task)
+                out.append(task)
+            self._pump_dispatch()
         return out
 
     def _pump_dispatch(self):
         if self._dispatch_busy or not self._dispatch_q:
             return
         self._dispatch_busy = True
-        self.engine.clock.schedule(self.dispatch_interval, self._dispatch_one)
+        # bulk dispatch: one tick serves up to dispatch_batch tasks and is
+        # charged batch x interval, holding the RP rate while spending
+        # O(1/batch) scheduler events per task
+        budget = min(self.dispatch_batch, len(self._dispatch_q))
+        self.engine.schedule(self.dispatch_interval * budget,
+                             self._dispatch_tick, budget)
 
-    def _dispatch_one(self):
+    def _dispatch_tick(self, budget: int):
         self._dispatch_busy = False
-        if not self._dispatch_q:
-            return
-        task = self._dispatch_q.popleft()
-        if task.state == TaskState.CANCELED:
-            self._pump_dispatch()
-            return
-        name = self.policy.route(task, self.backends)
-        ex = self.backends[name]
-        wait = max(0.0, getattr(ex, "ready_at", 0.0) - self.engine.now())
-        if wait > 0:
-            # backend still bootstrapping: hold and retry at readiness
-            self._dispatch_q.appendleft(task)
-            self.engine.clock.schedule(wait, self._pump_dispatch)
-            return
-        task.advance(TaskState.QUEUED, self.engine.now(),
-                     self.engine.profiler)
-        ex.submit(task)
-        if self.speculation and task.description.duration > 0:
-            self._arm_speculation(task)
+        dispatched = 0
+        while self._dispatch_q and dispatched < budget:
+            task = self._dispatch_q.popleft()
+            dispatched += 1
+            if task.state == TaskState.CANCELED:
+                continue
+            name = self.policy.route(task, self.backends)
+            ex = self.backends[name]
+            wait = max(0.0, getattr(ex, "ready_at", 0.0) - self.engine.now())
+            if wait > 0:
+                # backend still bootstrapping: hold and retry at readiness
+                self._dispatch_q.appendleft(task)
+                self.engine.schedule(wait, self._pump_dispatch)
+                return
+            task.advance(TaskState.QUEUED, self.engine.now(),
+                         self.engine.profiler)
+            ex.submit(task)
+            if (self.speculation and task.description.duration > 0
+                    and task.speculative_of is None):   # no clone chains
+                self._arm_speculation(task)
         self._pump_dispatch()
 
     # ------------------------------------------------------------- lifecycle
@@ -264,7 +224,12 @@ class Agent:
             self.policy.observe_completion(task.backend, self.engine.now())
         clone = self._spec_clones.pop(task.uid, None)
         if clone is not None and not clone.done:
-            self.backends[clone.backend or "flux"].cancel(clone)
+            if clone.backend in self.backends:
+                self.backends[clone.backend].cancel(clone)
+            else:
+                # clone still in the dispatch queue: cancel it directly
+                clone.advance(TaskState.CANCELED, self.engine.now(),
+                              self.engine.profiler)
         orig_uid = task.speculative_of
         if orig_uid:
             orig = self.tasks.get(orig_uid)
@@ -300,7 +265,7 @@ class Agent:
                 return
             if task.state != TaskState.RUNNING:
                 # not yet running: re-arm
-                self.engine.clock.schedule(deadline, watchdog)
+                self.engine.schedule(deadline, watchdog)
                 return
             import dataclasses
             d2 = dataclasses.replace(task.description, uid="")
@@ -316,7 +281,7 @@ class Agent:
             self._dispatch_q.append(clone)
             self._pump_dispatch()
 
-        self.engine.clock.schedule(deadline * 1.5, watchdog)
+        self.engine.schedule(deadline * 1.5, watchdog)
 
     # ----------------------------------------------------------------- fault
     def fail_flux_instance(self, idx: int, backend: str = "flux",
@@ -332,12 +297,18 @@ class Agent:
             ex.restart_instance(idx)
 
     # ------------------------------------------------------------------- run
-    def run_until_complete(self, max_events: int = 50_000_000) -> float:
-        self.engine.clock.run(max_events=max_events)
-        unfinished = [t for t in self.tasks.values() if not t.done]
+    def _unfinished(self) -> List[Task]:
+        return [t for t in self.tasks.values() if not t.done]
+
+    def run_until_complete(self, max_events: int = 50_000_000,
+                           timeout: Optional[float] = None) -> float:
+        self.engine.drain(lambda: not self._unfinished(),
+                          timeout=timeout, max_events=max_events)
+        with self.engine.lock:
+            unfinished = self._unfinished()
         if unfinished:
             raise RuntimeError(
-                f"simulation drained with {len(unfinished)} unfinished tasks "
+                f"run drained with {len(unfinished)} unfinished tasks "
                 f"(first: {unfinished[0]})")
         return self.engine.now()
 

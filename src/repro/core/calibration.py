@@ -54,6 +54,9 @@ def dragon_rate(nodes: int, kind: str = "executable") -> float:
 # --- RADICAL-Pilot agent ----------------------------------------------------------
 RP_DISPATCH_RATE = 1600.0    # §4.1.5: 1547 t/s peak "reflects the current
                              # upper bound of RP's task management subsystem"
+RP_DISPATCH_BATCH = 16       # tasks dispatched per agent tick (RP's
+                             # task-manager bulk path); the tick is charged
+                             # batch/RP_DISPATCH_RATE so the ceiling holds
 AGENT_STARTUP_S = 2.0        # pilot bootstrap (small vs Fig.7 runtimes)
 
 # Cross-instance coordination: the paper attributes flux_n's flattening at

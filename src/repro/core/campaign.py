@@ -30,13 +30,7 @@ class StageContext:
 
     @property
     def free_cores(self) -> int:
-        free = 0
-        for ex in self.agent.backends.values():
-            servers = getattr(ex, "instances", None) or [ex.server]
-            for s in servers:
-                if not s.dead:
-                    free += sum(s.pool.free_cores.values())
-        return free
+        return sum(ex.free_cores for ex in self.agent.backends.values())
 
     def results(self, stage_name: str) -> List[Task]:
         return self.campaign.stage_tasks.get(stage_name, [])

@@ -1,0 +1,3 @@
+"""Discrete-event executor backend models (sim mode). Importing a module
+registers its backend with ``repro.runtime.registry``; real-mode backends
+live in ``repro.runtime.real_executors``."""

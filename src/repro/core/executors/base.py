@@ -45,6 +45,34 @@ class BaseExecutor(ABC):
     def accepts(self, task: Task) -> bool:
         return True
 
+    def shutdown(self) -> None:
+        """Release backend resources (thread pools, subprocesses)."""
+
+    def _servers(self) -> List["SimLaunchServer"]:
+        servers = getattr(self, "instances", None)
+        if servers is None:
+            server = getattr(self, "server", None)
+            servers = [server] if server is not None else []
+        return servers
+
+    @property
+    def queue_depth(self) -> int:
+        """Tasks enqueued but not yet launched (shared backlogs counted
+        once) — the adaptive router's load signal."""
+        seen, depth = set(), 0
+        for s in self._servers():
+            if id(s.queue) not in seen:
+                seen.add(id(s.queue))
+                depth += len(s.queue)
+        return depth
+
+    @property
+    def free_cores(self) -> int:
+        """Currently idle cores across live launch servers (adaptive
+        campaign sizing reads this through StageContext)."""
+        return sum(sum(s.pool.free_cores.values())
+                   for s in self._servers() if not s.dead)
+
     @property
     @abstractmethod
     def total_cores(self) -> int: ...
@@ -111,7 +139,7 @@ class SimLaunchServer:
                      self.engine.profiler)
         self.busy = True
         svc = max(1e-6, self.service_time_fn(task))
-        self.engine.clock.schedule(svc, self._launched, task)
+        self.engine.schedule(svc, self._launched, task)
 
     def _launched(self, task: Task):
         self.busy = False
@@ -125,7 +153,7 @@ class SimLaunchServer:
                      self.engine.profiler)
         self.running[task.uid] = task
         dur = self.engine.actual_duration(task)
-        ev = self.engine.clock.schedule(dur, self._complete, task)
+        ev = self.engine.schedule(dur, self._complete, task)
         self._completion_events[task.uid] = ev
         self.pump()
 

@@ -17,6 +17,7 @@ from repro.core.executors.base import (BaseExecutor, CoordinationLimiter,
                                         SimLaunchServer)
 from repro.core.resources import NodePool, NodeSpec, partition_nodes
 from repro.core.task import Task, TaskState
+from repro.runtime.registry import register_executor
 
 
 class SimDragonExecutor(BaseExecutor):
@@ -104,3 +105,8 @@ class SimDragonExecutor(BaseExecutor):
     @property
     def total_cores(self) -> int:
         return self.n_nodes * self.spec.cores
+
+
+@register_executor("dragon", mode="sim")
+def _build_sim_dragon(engine, nodes, spec, partitions=1, **_):
+    return SimDragonExecutor(engine, nodes, partitions, spec)

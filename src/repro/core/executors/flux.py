@@ -17,6 +17,7 @@ from repro.core.executors.base import (BaseExecutor, CoordinationLimiter,
                                         SimLaunchServer)
 from repro.core.resources import NodePool, NodeSpec, partition_nodes
 from repro.core.task import Task, TaskState
+from repro.runtime.registry import register_executor
 
 
 class SimFluxExecutor(BaseExecutor):
@@ -125,7 +126,7 @@ class SimFluxExecutor(BaseExecutor):
             self.engine.profiler.record(self.engine.now(),
                                         f"{self.name}.inst{idx}",
                                         "executor:restart", {})
-        self.engine.clock.schedule(delay, _up)
+        self.engine.schedule(delay, _up)
 
     def _completed(self, task: Task):
         self.stats["completed"] += 1
@@ -145,3 +146,8 @@ class SimFluxExecutor(BaseExecutor):
     @property
     def total_cores(self) -> int:
         return self.n_nodes * self.spec.cores
+
+
+@register_executor("flux", mode="sim")
+def _build_sim_flux(engine, nodes, spec, partitions=1, **_):
+    return SimFluxExecutor(engine, nodes, partitions, spec)

@@ -14,6 +14,7 @@ from repro.core import calibration as CAL
 from repro.core.executors.base import BaseExecutor, SimLaunchServer
 from repro.core.resources import NodePool, NodeSpec
 from repro.core.task import Task
+from repro.runtime.registry import register_executor
 
 
 class SimSrunExecutor(BaseExecutor):
@@ -63,3 +64,8 @@ class SimSrunExecutor(BaseExecutor):
     @property
     def total_cores(self) -> int:
         return self.n_nodes * self.server.pool.spec.cores
+
+
+@register_executor("srun", mode="sim")
+def _build_sim_srun(engine, nodes, spec, **_):
+    return SimSrunExecutor(engine, nodes, spec)

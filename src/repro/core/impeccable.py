@@ -18,7 +18,7 @@ import math
 from typing import List
 
 from repro.core import calibration as CAL
-from repro.core.campaign import Campaign, Stage, StageContext
+from repro.core.campaign import Stage, StageContext
 from repro.core.task import TaskDescription
 
 
@@ -109,27 +109,36 @@ def make_impeccable_stages(n_nodes: int, iterations: int = 3,
     return stages
 
 
+def backend_config(backend: str, n_nodes: int, partitions: int = 0) -> dict:
+    """The paper's backend configurations, by name."""
+    if backend == "srun":
+        return {"srun": {}}
+    if backend == "flux":
+        k = partitions or max(1, n_nodes // 64)
+        return {"flux": {"partitions": k}}
+    if backend == "flux+dragon":
+        k = partitions or max(1, n_nodes // 128)
+        return {"flux": {"partitions": k, "nodes": (3 * n_nodes) // 4},
+                "dragon": {"partitions": max(1, k // 2),
+                           "nodes": n_nodes - (3 * n_nodes) // 4}}
+    raise KeyError(backend)
+
+
 def run_impeccable(backend: str, n_nodes: int, iterations: int = 3,
                    seed: int = 0, partitions: int = 0):
-    """Run the campaign on one backend config; returns (agent, campaign)."""
-    from repro.core.agent import Agent, SimEngine
-    eng = SimEngine(seed=seed)
-    if backend == "srun":
-        backends = {"srun": {}}
-    elif backend == "flux":
-        k = partitions or max(1, n_nodes // 64)
-        backends = {"flux": {"partitions": k}}
-    elif backend == "flux+dragon":
-        k = partitions or max(1, n_nodes // 128)
-        backends = {"flux": {"partitions": k, "nodes": (3 * n_nodes) // 4},
-                    "dragon": {"partitions": max(1, k // 2),
-                               "nodes": n_nodes - (3 * n_nodes) // 4}}
-    else:
-        raise KeyError(backend)
-    agent = Agent(eng, n_nodes, backends)
-    agent.start()
-    campaign = Campaign(agent, make_impeccable_stages(n_nodes, iterations))
-    campaign.start()
-    agent.run_until_complete()
-    assert campaign.complete, "campaign did not finish"
-    return agent, campaign
+    """Run the campaign on one backend config through the Session facade;
+    returns (agent, campaign)."""
+    from repro.core.pilot import PilotDescription
+    from repro.runtime.session import PilotManager, Session, TaskManager
+
+    with Session(mode="sim", seed=seed) as session:
+        pmgr = PilotManager(session)
+        tmgr = TaskManager(session)
+        pilot = pmgr.submit_pilots(PilotDescription(
+            nodes=n_nodes,
+            backends=backend_config(backend, n_nodes, partitions)))
+        tmgr.add_pilots(pilot)
+        campaign = tmgr.run_campaign(
+            make_impeccable_stages(n_nodes, iterations), name="impeccable")
+        assert campaign.complete, "campaign did not finish"
+        return pilot.agent, campaign

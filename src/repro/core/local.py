@@ -1,148 +1,68 @@
-"""Real-execution mode: the same task/state-machine/profiler stack actually
-executing Python and JAX payloads on this host.
+"""Backward-compatible local runtime — now a thin shim over the unified
+substrate (``Session(mode="real")`` + the registry's real backends).
 
-Backends mirror the simulation split:
-  * ``dragon`` — a worker pool for in-process Python *function* tasks
-    (Dragon's native mode: no process spawn per task, shared memory = shared
-    interpreter state / device buffers).
-  * ``flux``  — co-scheduled *executable* tasks; each partition maps to a jax
-    submesh (core/partition.py) and runs its tasks serially (co-scheduling:
-    one tightly-coupled job owns the partition at a time). Task callables
-    that declare a ``mesh`` keyword receive their partition's submesh.
+Historically this module carried its own thread-based task lifecycle
+(duplicating the agent's retries/routing); that code is gone. Tasks
+submitted here flow through the exact same Agent dispatch pipeline as the
+simulator — routing policies, retries, speculation, and profiling included:
 
-Used by the examples (mini-IMPECCABLE with real training/inference) and the
-integration tests; the paper-scale numbers come from the simulator.
+  * ``dragon`` — worker pool for in-process Python *function* tasks,
+  * ``flux``   — co-scheduled *executable* tasks, one per jax submesh
+    partition (callables declaring a ``mesh`` kwarg receive their
+    partition's submesh).
+
+Prefer the Session API (``repro.runtime``) in new code.
 """
 from __future__ import annotations
 
-import queue
-import threading
-import time
-import traceback
-from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
-from repro.core.events import Profiler
-from repro.core.partition import carve_submeshes
-from repro.core.task import Task, TaskDescription, TaskState
-
-
-class _RealClockRef:
-    def __init__(self):
-        self._t0 = time.monotonic()
-
-    def now(self) -> float:
-        return time.monotonic() - self._t0
+from repro.core.pilot import PilotDescription
+from repro.core.task import Task, TaskDescription
+from repro.runtime.session import PilotManager, Session, TaskManager
 
 
 class LocalRuntime:
-    """Thread-based agent for real payload execution."""
+    """Thread-based agent for real payload execution (compat facade)."""
 
     def __init__(self, n_function_workers: int = 4, mesh=None,
                  n_partitions: int = 1):
-        self.clock = _RealClockRef()
-        self.profiler = Profiler()
-        self._lock = threading.RLock()
-        self.tasks: Dict[str, Task] = {}
-        self._pending = 0
-        self._done_evt = threading.Event()
-        self._fn_pool = ThreadPoolExecutor(max_workers=n_function_workers,
-                                           thread_name_prefix="dragon")
-        self.partitions = (carve_submeshes(mesh, n_partitions)
-                           if mesh is not None else [None] * n_partitions)
-        self._exec_pool = ThreadPoolExecutor(
-            max_workers=max(1, len(self.partitions)),
-            thread_name_prefix="flux")
-        self._part_q: "queue.Queue" = queue.Queue()
-        for p in self.partitions:
-            self._part_q.put(p)
+        self.session = Session(mode="real")
+        self._pmgr = PilotManager(self.session)
+        self._tmgr = TaskManager(self.session)
+        pilot = self._pmgr.submit_pilots(PilotDescription(
+            nodes=max(1, n_partitions),
+            backends={
+                "dragon": {"workers": n_function_workers},
+                "flux": {"partitions": n_partitions, "mesh": mesh},
+            }))
+        self._tmgr.add_pilots(pilot)
+        self.pilot = pilot
+        self.agent = pilot.agent
 
-    # ---------------------------------------------------------------- submit
+    # ---------------------------------------------------------------- compat
+    @property
+    def clock(self):
+        return self.session.engine.clock
+
+    @property
+    def profiler(self):
+        return self.session.engine.profiler
+
+    @property
+    def tasks(self) -> Dict[str, Task]:
+        return self.agent.tasks
+
+    @property
+    def partitions(self):
+        return self.agent.backends["flux"].partitions
+
+    # ------------------------------------------------------------------- api
     def submit(self, descriptions: List[TaskDescription]) -> List[Task]:
-        out = []
-        with self._lock:
-            self._done_evt.clear()
-            for d in descriptions:
-                task = Task(d)
-                self.tasks[task.uid] = task
-                self._pending += 1
-                task.advance(TaskState.SCHEDULING, self.clock.now(),
-                             self.profiler)
-                task.advance(TaskState.QUEUED, self.clock.now(),
-                             self.profiler)
-                if d.kind == "function":
-                    task.backend = "dragon"
-                    self._fn_pool.submit(self._run_fn, task)
-                else:
-                    task.backend = "flux"
-                    self._exec_pool.submit(self._run_exec, task)
-                out.append(task)
-        return out
+        return self._tmgr.submit_tasks(list(descriptions))
 
-    # ------------------------------------------------------------- execution
-    def _run_fn(self, task: Task):
-        self._execute(task, partition=None)
-
-    def _run_exec(self, task: Task):
-        part = self._part_q.get()            # co-schedule: own one partition
-        try:
-            self._execute(task, partition=part)
-        finally:
-            self._part_q.put(part)
-
-    def _execute(self, task: Task, partition):
-        d = task.description
-        with self._lock:
-            task.advance(TaskState.LAUNCHING, self.clock.now(), self.profiler)
-            task.advance(TaskState.RUNNING, self.clock.now(), self.profiler)
-        try:
-            kwargs = dict(d.kwargs)
-            if partition is not None and _accepts_kw(d.fn, "mesh"):
-                kwargs["mesh"] = partition.mesh
-            result = d.fn(*d.args, **kwargs) if d.fn else None
-            with self._lock:
-                task.result = result
-                task.advance(TaskState.DONE, self.clock.now(), self.profiler)
-        except Exception as e:                                # noqa: BLE001
-            with self._lock:
-                task.error = f"{type(e).__name__}: {e}"
-                task.advance(TaskState.FAILED, self.clock.now(),
-                             self.profiler)
-                if task.retries < d.max_retries:
-                    task.retries += 1
-                    task.advance(TaskState.SCHEDULING, self.clock.now(),
-                                 self.profiler)
-                    task.advance(TaskState.QUEUED, self.clock.now(),
-                                 self.profiler)
-                    pool = (self._fn_pool if d.kind == "function"
-                            else self._exec_pool)
-                    run = (self._run_fn if d.kind == "function"
-                           else self._run_exec)
-                    pool.submit(run, task)
-                    return
-        finally:
-            pass
-        with self._lock:
-            self._pending -= 1
-            if self._pending == 0:
-                self._done_evt.set()
-
-    # ------------------------------------------------------------------ wait
     def wait(self, timeout: Optional[float] = None) -> bool:
-        if self._pending == 0:
-            return True
-        return self._done_evt.wait(timeout)
+        return self._tmgr.wait_tasks(timeout=timeout)
 
     def shutdown(self):
-        self._fn_pool.shutdown(wait=False)
-        self._exec_pool.shutdown(wait=False)
-
-
-def _accepts_kw(fn: Optional[Callable], name: str) -> bool:
-    if fn is None:
-        return False
-    import inspect
-    try:
-        return name in inspect.signature(fn).parameters
-    except (TypeError, ValueError):
-        return False
+        self.session.close()

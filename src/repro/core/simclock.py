@@ -88,8 +88,14 @@ class RealClock:
         t = threading.Timer(max(0.0, delay), fn, args=args)
         t.daemon = True
         t.start()
+        self._timers = [p for p in self._timers if p.is_alive()]
         self._timers.append(t)
         return t
+
+    def cancel_all(self):
+        for t in self._timers:
+            t.cancel()
+        self._timers.clear()
 
     def run(self, until: Optional[float] = None, max_events: int = 0) -> int:
         if until is not None:

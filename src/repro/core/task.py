@@ -51,9 +51,11 @@ class TaskDescription:
     gpus: int = 0
     nodes: int = 0                      # >0: whole-node co-scheduling (MPI-like)
     duration: float = 0.0               # sim-mode execution time
-    fn: Optional[Callable] = None       # real-mode payload
+    fn: Optional[Callable] = None       # real-mode in-process payload
     args: Tuple = ()
     kwargs: Dict[str, Any] = field(default_factory=dict)
+    executable: str = ""                # real-mode subprocess payload
+    arguments: Tuple = ()               # argv tail for ``executable``
     coupling: str = "loose"             # loose | tight | data
     backend: Optional[str] = None       # explicit routing override
     stage: str = ""

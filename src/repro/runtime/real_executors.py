@@ -1,0 +1,232 @@
+"""Real-mode executor backends: the same BaseExecutor surface the simulator's
+backend models implement, but payloads actually execute on this host.
+
+Backends mirror the simulation split:
+  * ``dragon`` — a worker-thread pool for in-process Python *function* tasks
+    (Dragon's native mode: no process spawn per task, shared interpreter
+    state / device buffers).
+  * ``flux``   — co-scheduled *executable* tasks; each partition maps to a
+    jax submesh (core/partition.py) and runs its tasks serially
+    (co-scheduling: one tightly-coupled job owns the partition at a time).
+    Task callables that declare a ``mesh`` keyword receive their partition's
+    submesh.
+  * ``popen``  — external executables launched as subprocesses
+    (``TaskDescription.executable`` + ``arguments``); stdout becomes
+    ``task.result``.
+
+All task state transitions are committed under ``engine.lock`` and followed
+by ``engine.notify()``, so the agent's single-threaded lifecycle logic
+(retries, speculation, campaign stage release) runs unchanged on top.
+"""
+from __future__ import annotations
+
+import inspect
+import queue
+import subprocess
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Dict, List, Optional
+
+from repro.core.executors.base import BaseExecutor
+from repro.core.partition import carve_submeshes
+from repro.core.task import Task, TaskState
+from repro.runtime.registry import register_executor
+
+
+def _accepts_kw(fn, name: str) -> bool:
+    if fn is None:
+        return False
+    try:
+        return name in inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False
+
+
+class RealExecutorBase(BaseExecutor):
+    """Thread-pool executor skeleton: queueing, cancellation, and locked
+    state commits; subclasses provide ``_payload``."""
+
+    def __init__(self, engine, name: str, workers: int,
+                 thread_prefix: str = "worker"):
+        super().__init__(name)
+        self.engine = engine
+        self.workers = workers
+        self._pool = ThreadPoolExecutor(max_workers=max(1, workers),
+                                        thread_name_prefix=thread_prefix)
+        self._futures: Dict[str, Future] = {}
+        self._active = 0
+
+    # ------------------------------------------------------------- lifecycle
+    def start(self) -> float:
+        self.alive = True
+        return 0.0
+
+    def submit(self, task: Task):
+        task.backend = self.name
+        try:
+            self._futures[task.uid] = self._pool.submit(self._run, task)
+        except RuntimeError as e:       # pool shut down (session closed)
+            eng = self.engine
+            task.error = f"{self.name}: {e}"
+            task.advance(TaskState.FAILED, eng.now(), eng.profiler)
+            self.stats["failed"] += 1
+            if self.on_failure:
+                self.on_failure(task, task.error)
+            eng.notify()
+
+    def _run(self, task: Task):
+        eng = self.engine
+        with eng.lock:
+            self._futures.pop(task.uid, None)
+            if task.done:                         # canceled while queued
+                return
+            self._active += 1
+            task.advance(TaskState.LAUNCHING, eng.now(), eng.profiler)
+            task.advance(TaskState.RUNNING, eng.now(), eng.profiler)
+            self.stats["launched"] += 1
+        try:
+            result = self._payload(task)
+        except Exception as e:                                # noqa: BLE001
+            err = f"{type(e).__name__}: {e}"
+            with eng.lock:
+                self._active -= 1
+                if not task.done:
+                    task.error = err
+                    task.advance(TaskState.FAILED, eng.now(), eng.profiler)
+                    self.stats["failed"] += 1
+                    if self.on_failure:
+                        self.on_failure(task, err)
+            eng.notify()
+            return
+        with eng.lock:
+            self._active -= 1
+            if not task.done:                     # may have been CANCELED
+                task.result = result
+                task.advance(TaskState.DONE, eng.now(), eng.profiler)
+                self.stats["completed"] += 1
+                if self.on_complete:
+                    self.on_complete(task)
+        eng.notify()
+
+    def _payload(self, task: Task):
+        raise NotImplementedError
+
+    # --------------------------------------------------------------- control
+    def cancel(self, task: Task):
+        eng = self.engine
+        with eng.lock:
+            fut = self._futures.pop(task.uid, None)
+            if fut is not None:
+                fut.cancel()
+            if not task.done:
+                # a still-running payload sees the terminal state at commit
+                # time and discards its result
+                task.advance(TaskState.CANCELED, eng.now(), eng.profiler)
+        eng.notify()
+
+    def shutdown(self):
+        self._pool.shutdown(wait=False)
+
+    # ----------------------------------------------------------------- stats
+    @property
+    def queue_depth(self) -> int:
+        return len(self._futures)
+
+    @property
+    def free_cores(self) -> int:
+        return max(0, self.workers - self._active)
+
+    @property
+    def total_cores(self) -> int:
+        return self.workers
+
+
+class RealFunctionExecutor(RealExecutorBase):
+    """Dragon-style in-process function executor (thread pool)."""
+
+    kind = "dragon"
+
+    def __init__(self, engine, nodes: int = 1, spec=None, workers: int = 4,
+                 name: str = "dragon", **_):
+        super().__init__(engine, name, workers, thread_prefix="dragon")
+
+    def accepts(self, task: Task) -> bool:
+        d = task.description
+        return d.fn is not None and d.nodes == 0
+
+    def _payload(self, task: Task):
+        d = task.description
+        return d.fn(*d.args, **dict(d.kwargs)) if d.fn else None
+
+
+class RealPartitionExecutor(RealExecutorBase):
+    """Flux-style co-scheduling executor: one task owns a partition (jax
+    submesh) at a time; partitions run concurrently."""
+
+    kind = "flux"
+
+    def __init__(self, engine, nodes: int = 1, spec=None,
+                 partitions: int = 1, mesh=None, name: str = "flux", **_):
+        self.partitions = (carve_submeshes(mesh, partitions)
+                           if mesh is not None else [None] * partitions)
+        super().__init__(engine, name, len(self.partitions),
+                         thread_prefix="flux")
+        self._part_q: "queue.Queue" = queue.Queue()
+        for p in self.partitions:
+            self._part_q.put(p)
+
+    def accepts(self, task: Task) -> bool:
+        return task.description.fn is not None
+
+    def _payload(self, task: Task):
+        part = self._part_q.get()        # co-schedule: own one partition
+        try:
+            d = task.description
+            task.partition = getattr(part, "index", None)
+            kwargs = dict(d.kwargs)
+            if part is not None and _accepts_kw(d.fn, "mesh"):
+                kwargs["mesh"] = part.mesh
+            return d.fn(*d.args, **kwargs) if d.fn else None
+        finally:
+            self._part_q.put(part)
+
+
+class SubprocessExecutor(RealExecutorBase):
+    """Launches ``TaskDescription.executable`` + ``arguments`` as a host
+    subprocess — the real analogue of launching executable tasks through a
+    batch runtime. Nonzero exit codes fail the task (and feed the agent's
+    retry path); stdout becomes ``task.result``."""
+
+    kind = "popen"
+
+    def __init__(self, engine, nodes: int = 1, spec=None, workers: int = 4,
+                 timeout: Optional[float] = None, name: str = "popen", **_):
+        super().__init__(engine, name, workers, thread_prefix="popen")
+        self.timeout = timeout
+
+    def accepts(self, task: Task) -> bool:
+        return bool(task.description.executable)
+
+    def _payload(self, task: Task):
+        d = task.description
+        argv: List[str] = [d.executable, *map(str, d.arguments)]
+        proc = subprocess.run(argv, capture_output=True, text=True,
+                              timeout=self.timeout)
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"exit {proc.returncode}: {proc.stderr.strip()[:500]}")
+        return proc.stdout
+
+
+@register_executor("dragon", mode="real")
+def _build_real_dragon(engine, nodes=1, spec=None, **options):
+    return RealFunctionExecutor(engine, nodes=nodes, spec=spec, **options)
+
+
+@register_executor("flux", mode="real")
+def _build_real_flux(engine, nodes=1, spec=None, **options):
+    return RealPartitionExecutor(engine, nodes=nodes, spec=spec, **options)
+
+
+@register_executor("popen", mode="real")
+def _build_popen(engine, nodes=1, spec=None, **options):
+    return SubprocessExecutor(engine, nodes=nodes, spec=spec, **options)

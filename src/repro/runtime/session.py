@@ -1,0 +1,218 @@
+"""RADICAL-Pilot-style top-level API: Session -> PilotManager -> TaskManager.
+
+    from repro.runtime import Session, PilotManager, TaskManager
+    from repro.core.pilot import PilotDescription
+    from repro.core.task import TaskDescription
+
+    with Session(mode="sim", seed=0) as session:        # or mode="real"
+        pmgr  = PilotManager(session)
+        tmgr  = TaskManager(session)
+        pilot = pmgr.submit_pilots(PilotDescription(
+            nodes=4, backends={"flux": {"partitions": 2}}))
+        tmgr.add_pilots(pilot)
+        tasks = tmgr.submit_tasks([TaskDescription(duration=180.0)
+                                   for _ in range(100)])
+        tmgr.wait_tasks()
+
+The session owns the engine (the pluggable substrate: simulated or real);
+pilots wrap resource acquisition in their own state machine (NEW ->
+LAUNCHING -> ACTIVE -> DONE) and each ACTIVE pilot runs one Agent; the task
+manager routes task submissions to pilot agents and blocks on completion.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Union
+
+from repro.core.pilot import Pilot, PilotDescription, PilotState
+from repro.core.task import Task, TaskDescription, new_uid
+from repro.runtime.engine import Engine, RealEngine, SimEngine
+
+
+class Session:
+    """Root object: owns the engine and all managers; ``close()`` (or the
+    context manager) tears down pilots, executors, and engine timers."""
+
+    def __init__(self, mode: str = "sim", seed: int = 0,
+                 engine: Optional[Engine] = None, uid: str = ""):
+        if engine is not None:
+            self.engine = engine
+        elif mode == "sim":
+            self.engine = SimEngine(seed=seed)
+        elif mode == "real":
+            self.engine = RealEngine(seed=seed)
+        else:
+            raise KeyError(f"unknown session mode {mode!r}")
+        self.uid = uid or new_uid("session")
+        self.closed = False
+        self._pmgrs: List["PilotManager"] = []
+        self._tmgrs: List["TaskManager"] = []
+        self.engine.profiler.record(self.engine.now(), self.uid,
+                                    "session:start",
+                                    {"mode": self.engine.mode})
+
+    @property
+    def mode(self) -> str:
+        return self.engine.mode
+
+    @property
+    def profiler(self):
+        return self.engine.profiler
+
+    def pilots(self) -> List[Pilot]:
+        return [p for m in self._pmgrs for p in m.pilots]
+
+    def close(self):
+        if self.closed:
+            return
+        self.closed = True
+        with self.engine.lock:
+            now = self.engine.now()
+            for pilot in self.pilots():
+                if pilot.state == PilotState.LAUNCHING:
+                    pilot.advance(PilotState.CANCELED, now,
+                                  self.engine.profiler)
+                elif pilot.state == PilotState.ACTIVE:
+                    pilot.advance(PilotState.DONE, now, self.engine.profiler)
+                agent = getattr(pilot, "agent", None)
+                if agent is not None:
+                    for ex in agent.backends.values():
+                        ex.shutdown()
+            self.engine.profiler.record(now, self.uid, "session:close", {})
+        self.engine.shutdown()
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+class PilotManager:
+    """Manages pilot lifecycles: ``submit_pilots`` acquires resources
+    (constructs the agent over the session engine) and drives the pilot
+    state machine; activation is stamped at agent readiness."""
+
+    def __init__(self, session: Session, uid: str = ""):
+        self.session = session
+        self.uid = uid or new_uid("pmgr")
+        self.pilots: List[Pilot] = []
+        session._pmgrs.append(self)
+
+    def submit_pilots(self, descriptions: Union[PilotDescription,
+                                                Sequence[PilotDescription]],
+                      **agent_options) -> Union[Pilot, List[Pilot]]:
+        """Launch pilot(s). ``agent_options`` (policy=, speculation=,
+        dispatch_rate=, dispatch_batch=, ...) pass through to the Agent."""
+        # deferred import: repro.core.agent imports this package at load time
+        from repro.core.agent import Agent
+
+        single = isinstance(descriptions, PilotDescription)
+        descs = [descriptions] if single else list(descriptions)
+        engine = self.session.engine
+        out = []
+        for pd in descs:
+            pilot = Pilot(pd)
+            with engine.lock:
+                pilot.advance(PilotState.LAUNCHING, engine.now(),
+                              engine.profiler)
+                agent = Agent(engine, pd.nodes, pd.backends,
+                              node_spec=pd.node_spec, **agent_options)
+                agent.start()
+                pilot.agent = agent
+                delay = max(0.0, agent.ready_at - engine.now())
+                engine.schedule(delay, self._activate, pilot)
+            self.pilots.append(pilot)
+            out.append(pilot)
+        return out[0] if single else out
+
+    def _activate(self, pilot: Pilot):
+        if pilot.state == PilotState.LAUNCHING:
+            pilot.advance(PilotState.ACTIVE, self.session.engine.now(),
+                          self.session.engine.profiler)
+
+    def cancel_pilots(self, pilots: Optional[Sequence[Pilot]] = None):
+        engine = self.session.engine
+        with engine.lock:
+            for pilot in (pilots if pilots is not None else self.pilots):
+                if pilot.state in (PilotState.NEW, PilotState.LAUNCHING,
+                                   PilotState.ACTIVE):
+                    pilot.advance(PilotState.CANCELED, engine.now(),
+                                  engine.profiler)
+
+
+class TaskManager:
+    """Routes task submissions to pilot agents (RP's task-manager bulk
+    path: one locked bulk submit per call) and waits on completion."""
+
+    def __init__(self, session: Session, uid: str = ""):
+        self.session = session
+        self.uid = uid or new_uid("tmgr")
+        self._pilots: List[Pilot] = []
+        self.tasks: Dict[str, Task] = {}
+        session._tmgrs.append(self)
+
+    def add_pilots(self, pilots: Union[Pilot, Sequence[Pilot]]):
+        for p in ([pilots] if isinstance(pilots, Pilot) else list(pilots)):
+            if p not in self._pilots:
+                self._pilots.append(p)
+
+    @property
+    def agent(self):
+        """The (single) bound pilot's agent — campaign entry point."""
+        if len(self._pilots) != 1:
+            raise RuntimeError(f"{self.uid}: .agent needs exactly one pilot "
+                               f"(have {len(self._pilots)})")
+        return self._pilots[0].agent
+
+    def submit_tasks(self, descriptions: Union[TaskDescription,
+                                               Sequence[TaskDescription]]
+                     ) -> Union[Task, List[Task]]:
+        single = isinstance(descriptions, TaskDescription)
+        descs = [descriptions] if single else list(descriptions)
+        if self.session.closed:
+            raise RuntimeError(f"{self.uid}: session {self.session.uid} "
+                               f"is closed")
+        if not self._pilots:
+            raise RuntimeError(f"{self.uid}: no pilots added")
+        # least-loaded pilot takes the whole bulk (late binding happens
+        # inside the agent; cross-pilot balancing stays coarse-grained);
+        # the lock keeps the load scan consistent with timer-thread
+        # mutations of agent.tasks on the real engine
+        with self.session.engine.lock:
+            pilot = min(self._pilots,
+                        key=lambda p: sum(1 for t in p.agent.tasks.values()
+                                          if not t.done))
+            tasks = pilot.agent.submit(descs)
+        for t in tasks:
+            self.tasks[t.uid] = t
+        return tasks[0] if single else tasks
+
+    def wait_tasks(self, tasks: Optional[Sequence[Task]] = None,
+                   timeout: Optional[float] = None) -> bool:
+        """Block until the given tasks (default: all submitted through this
+        manager) reach a terminal state. Sim engines drain their event heap;
+        real engines wait on wall-clock completion."""
+        watched = list(tasks) if tasks is not None else None
+
+        def finished() -> bool:
+            pool = (watched if watched is not None
+                    else list(self.tasks.values()))
+            return all(t.done for t in pool)
+
+        return self.session.engine.drain(finished, timeout=timeout)
+
+    def run_campaign(self, stages, name: str = "campaign",
+                     timeout: Optional[float] = None):
+        """Convenience: run a Campaign over this manager's single pilot and
+        block until it completes. Returns the Campaign."""
+        from repro.core.campaign import Campaign
+
+        camp = Campaign(self.agent, stages, name=name)
+        with self.session.engine.lock:
+            camp.start()
+        self.session.engine.drain(
+            lambda: all(t.done for t in self.agent.tasks.values())
+            and camp.complete,
+            timeout=timeout)
+        return camp

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis",
+                    reason="property-based kernel sweeps need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels.decode_attention import ref as da_ref
 from repro.kernels.decode_attention.ops import decode_attention

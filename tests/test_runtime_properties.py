@@ -2,7 +2,11 @@
 accounting never oversubscribes, the virtual clock is causally ordered, and
 arbitrary random workloads always drain to terminal states with bounded
 concurrency."""
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property-based invariants need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import calibration as CAL
 from repro.core.agent import Agent, SimEngine

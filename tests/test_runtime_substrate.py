@@ -1,0 +1,210 @@
+"""The unified runtime substrate: the same Campaign definition must execute
+identically (terminal states, stage ordering) on the simulated and the real
+engine through the Session API, and registry-added backends must be routable
+without touching agent code."""
+import pytest
+
+from repro.core.campaign import Stage
+from repro.core.executors.base import BaseExecutor
+from repro.core.pilot import PilotDescription, PilotState
+from repro.core.task import TaskDescription, TaskState
+from repro.runtime import (PilotManager, Session, TaskManager,
+                           available_executors, register_executor,
+                           unregister_executor)
+
+
+def _campaign_stages():
+    """A small diamond campaign whose tasks carry both a sim duration and a
+    real payload, so one definition runs on either engine."""
+    def fn(x):
+        return x * x
+
+    def mk(n, kind, stage_tag):
+        return [TaskDescription(kind=kind, cores=1, duration=0.5,
+                                fn=fn, args=(i,), workflow=stage_tag)
+                for i in range(n)]
+
+    return [
+        Stage("prepare", lambda ctx: mk(4, "function", "prepare")),
+        Stage("train", lambda ctx: mk(2, "executable", "train"),
+              depends_on=["prepare"]),
+        Stage("score", lambda ctx: mk(3, "function", "score"),
+              depends_on=["prepare"]),
+        Stage("select", lambda ctx: mk(1, "function", "select"),
+              depends_on=["train", "score"]),
+    ]
+
+
+def _run_campaign(mode):
+    with Session(mode=mode, seed=0) as session:
+        pmgr = PilotManager(session)
+        tmgr = TaskManager(session)
+        pilot = pmgr.submit_pilots(PilotDescription(
+            nodes=4, backends={"flux": {"partitions": 2}, "dragon": {}}))
+        tmgr.add_pilots(pilot)
+        camp = tmgr.run_campaign(_campaign_stages(), timeout=120.0)
+        assert camp.complete, f"{mode}: campaign incomplete"
+        return camp, pilot
+
+
+@pytest.mark.parametrize("mode", ["sim", "real"])
+def test_campaign_completes_on_engine(mode):
+    camp, pilot = _run_campaign(mode)
+    assert pilot.state == PilotState.DONE          # closed session -> DONE
+    for name, tasks in camp.stage_tasks.items():
+        assert all(t.state == TaskState.DONE for t in tasks), name
+
+    # stage ordering: dependents start only after dependencies finish
+    def done_at(stage):
+        return max(t.timestamps["DONE"] for t in camp.stage_tasks[stage])
+
+    def started_at(stage):
+        return min(t.timestamps["RUNNING"] for t in camp.stage_tasks[stage])
+
+    assert started_at("train") >= done_at("prepare")
+    assert started_at("score") >= done_at("prepare")
+    assert started_at("select") >= max(done_at("train"), done_at("score"))
+
+
+def test_campaign_identical_across_engines():
+    """RP's promise: one campaign definition, interchangeable substrates —
+    same per-stage task counts, terminal states, and payload results."""
+    sim, _ = _run_campaign("sim")
+    real, _ = _run_campaign("real")
+    assert set(sim.stage_tasks) == set(real.stage_tasks)
+    for name in sim.stage_tasks:
+        s, r = sim.stage_tasks[name], real.stage_tasks[name]
+        assert len(s) == len(r), name
+        assert ([t.state for t in s] == [t.state for t in r]
+                == [TaskState.DONE] * len(s)), name
+    # real mode actually executed the payloads
+    results = sorted(t.result for t in real.stage_tasks["prepare"])
+    assert results == [0, 1, 4, 9]
+
+
+# ---------------------------------------------------------------- registry
+class InstantExecutor(BaseExecutor):
+    """Minimal custom backend: completes every task after one engine tick."""
+
+    kind = "instant"
+
+    def __init__(self, engine, name="instant"):
+        super().__init__(name)
+        self.engine = engine
+
+    def start(self):
+        self.alive = True
+        return 0.0
+
+    def submit(self, task):
+        task.backend = self.name
+        self.engine.schedule(0.0, self._finish, task)
+
+    def _finish(self, task):
+        e = self.engine
+        task.advance(TaskState.LAUNCHING, e.now(), e.profiler)
+        task.advance(TaskState.RUNNING, e.now(), e.profiler)
+        task.result = "instant"
+        task.advance(TaskState.DONE, e.now(), e.profiler)
+        self.stats["completed"] += 1
+        if self.on_complete:
+            self.on_complete(task)
+
+    def cancel(self, task):
+        pass
+
+    @property
+    def queue_depth(self):
+        return 0
+
+    @property
+    def free_cores(self):
+        return 1
+
+    @property
+    def total_cores(self):
+        return 1
+
+
+def test_registered_custom_executor_is_routable():
+    """A backend registered from outside plugs into the agent with no edits
+    to agent.py: construction via registry, routing via explicit override
+    and via the accepts() fallback."""
+    register_executor("instant", mode="sim")(
+        lambda engine, nodes, spec, **_: InstantExecutor(engine))
+    try:
+        assert "instant" in available_executors("sim")
+        with Session(mode="sim") as session:
+            pmgr, tmgr = PilotManager(session), TaskManager(session)
+            pilot = pmgr.submit_pilots(PilotDescription(
+                nodes=2, backends={"instant": {}}))
+            tmgr.add_pilots(pilot)
+            tasks = tmgr.submit_tasks(
+                [TaskDescription(backend="instant"),          # explicit
+                 TaskDescription(kind="function")])           # fallback
+            assert tmgr.wait_tasks()
+            assert [t.state for t in tasks] == [TaskState.DONE] * 2
+            assert {t.backend for t in tasks} == {"instant"}
+    finally:
+        unregister_executor("instant", mode="sim")
+
+
+def test_unknown_backend_raises_with_candidates():
+    with pytest.raises(KeyError, match="no executor"):
+        with Session(mode="sim") as session:
+            PilotManager(session).submit_pilots(
+                PilotDescription(nodes=1, backends={"nope": {}}))
+
+
+# ------------------------------------------------------------ real backends
+def test_subprocess_executor_runs_executables():
+    """The popen backend launches real host processes for executable tasks
+    (routed automatically when TaskDescription.executable is set)."""
+    with Session(mode="real") as session:
+        pmgr, tmgr = PilotManager(session), TaskManager(session)
+        pilot = pmgr.submit_pilots(PilotDescription(
+            nodes=1, backends={"popen": {}, "dragon": {}}))
+        tmgr.add_pilots(pilot)
+        ok = tmgr.submit_tasks(TaskDescription(
+            kind="executable", executable="echo", arguments=("hello", 42)))
+        bad = tmgr.submit_tasks(TaskDescription(
+            kind="executable", executable="false", max_retries=1))
+        assert tmgr.wait_tasks(timeout=60)
+        assert ok.state == TaskState.DONE and ok.result.strip() == "hello 42"
+        assert ok.backend == "popen"
+        assert bad.state == TaskState.FAILED and bad.retries == 1
+
+
+def test_real_engine_retries_through_agent_pipeline():
+    """Retries run through the agent's (not a backend-local) retry path on
+    the real engine: profiler records agent:retry events."""
+    attempts = {"n": 0}
+
+    def flaky():
+        attempts["n"] += 1
+        if attempts["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    with Session(mode="real") as session:
+        pmgr, tmgr = PilotManager(session), TaskManager(session)
+        pilot = pmgr.submit_pilots(PilotDescription(
+            nodes=1, backends={"dragon": {"workers": 1}}))
+        tmgr.add_pilots(pilot)
+        task = tmgr.submit_tasks(TaskDescription(
+            kind="function", fn=flaky, max_retries=3))
+        assert tmgr.wait_tasks(timeout=60)
+        assert task.state == TaskState.DONE and task.result == "ok"
+        assert len(session.profiler.by_name("agent:retry")) == 2
+
+
+def test_session_pilot_state_machine():
+    session = Session(mode="sim")
+    pmgr = PilotManager(session)
+    pilot = pmgr.submit_pilots(PilotDescription(nodes=2))
+    assert pilot.state == PilotState.LAUNCHING     # clock not yet run
+    session.engine.drain()
+    assert pilot.state == PilotState.ACTIVE
+    assert pilot.timestamps["ACTIVE"] >= pilot.agent.ready_at
+    session.close()
+    assert pilot.state == PilotState.DONE
