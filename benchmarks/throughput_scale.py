@@ -1,0 +1,122 @@
+"""Throughput/scale benchmark for the runtime substrate: Fig-5-style
+null-task campaigns at 10k/100k/1M tasks, measuring the *harness* (wall
+time, sim-events/s, tasks/s, peak RSS) rather than the simulated system.
+
+This seeds the BENCH perf trajectory: every run writes ``BENCH_runtime.json``
+so CI can track sim throughput across PRs. The paper's characterization
+methodology (Merzky et al. SC-W'25 §4.1; RADICAL-Pilot characterization,
+arXiv:2103.00091) runs 10^5-10^6 null tasks to measure runtime overheads —
+this benchmark makes sure our simulator can replay campaigns at that scale
+without itself becoming the bottleneck.
+
+Usage:
+    PYTHONPATH=src python benchmarks/throughput_scale.py            # 10k/100k/1M
+    PYTHONPATH=src python benchmarks/throughput_scale.py --quick    # 10k only
+    PYTHONPATH=src python benchmarks/throughput_scale.py --scales 100000
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import resource
+import sys
+import time
+from typing import Dict, List
+
+from repro.core.analytics import compute_metrics, concurrency_series
+from repro.core.pilot import PilotDescription
+from repro.core.task import TaskDescription
+from repro.runtime import PilotManager, Session, TaskManager
+
+DEFAULT_SCALES = (10_000, 100_000, 1_000_000)
+NODES = 64
+
+
+def _peak_rss_mb() -> float:
+    ru = resource.getrusage(resource.RUSAGE_SELF)
+    return ru.ru_maxrss / 1024.0          # linux reports KiB
+
+
+def run_campaign(n_tasks: int, hybrid: bool, seed: int = 0) -> Dict:
+    """One end-to-end Fig-5-style run: build descriptions, submit through
+    the Session facade, drain, compute metrics. Returns the measurement."""
+    t0 = time.time()
+    if hybrid:
+        # Fig 5d: mixed executable+function load over flux+dragon
+        backends = {"flux": {"partitions": 8, "nodes": NODES // 2},
+                    "dragon": {"partitions": 8, "nodes": NODES // 2}}
+        descs = [TaskDescription(cores=1, duration=0.0,
+                                 kind="function" if i % 2 else "executable")
+                 for i in range(n_tasks)]
+    else:
+        backends = {"flux": {"partitions": 8}}
+        descs = [TaskDescription(cores=1, duration=0.0)
+                 for _ in range(n_tasks)]
+    with Session(mode="sim", seed=seed) as session:
+        pilot = PilotManager(session).submit_pilots(
+            PilotDescription(nodes=NODES, backends=backends))
+        tmgr = TaskManager(session)
+        tmgr.add_pilots(pilot)
+        tmgr.submit_tasks(descs)
+        tmgr.wait_tasks()
+        agent = pilot.agent
+        engine = session.engine
+        m = compute_metrics(list(agent.tasks.values()), agent.total_cores)
+        series = concurrency_series(list(agent.tasks.values()))
+        wall = time.time() - t0
+        return {
+            "config": "flux+dragon hybrid" if hybrid else "flux x8",
+            "n_tasks": n_tasks,
+            "wall_s": round(wall, 3),
+            "tasks_per_s": round(n_tasks / wall),
+            "sim_events": engine.events_fired,
+            "sim_events_per_s": round(engine.events_fired / wall),
+            "trace_events": len(session.profiler),
+            "peak_rss_mb": round(_peak_rss_mb(), 1),
+            "sim_throughput_avg": round(m.throughput_avg, 1),
+            "sim_utilization": round(m.utilization, 4),
+            "concurrency_samples": len(series),
+        }
+
+
+def main(argv: List[str] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="10k-task smoke run only (CI)")
+    ap.add_argument("--scales", type=int, nargs="+", default=None,
+                    help="explicit task counts")
+    ap.add_argument("--hybrid", action="store_true",
+                    help="flux+dragon mixed-modality config (Fig 5d)")
+    ap.add_argument("--output", default="BENCH_runtime.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    scales = (args.scales if args.scales
+              else ((10_000,) if args.quick else DEFAULT_SCALES))
+    results = []
+    for n in scales:
+        r = run_campaign(n, hybrid=args.hybrid, seed=args.seed)
+        results.append(r)
+        print(f"{r['config']:>20}  n={n:>9,}  wall={r['wall_s']:>8.2f}s  "
+              f"tasks/s={r['tasks_per_s']:>7,}  "
+              f"sim-events/s={r['sim_events_per_s']:>8,}  "
+              f"rss={r['peak_rss_mb']:.0f}MB", flush=True)
+
+    payload = {
+        "benchmark": "throughput_scale",
+        "protocol": ("end-to-end per scale: build TaskDescriptions, submit "
+                     "via Session/TaskManager, drain the sim engine, "
+                     "compute_metrics + concurrency_series; fresh Session "
+                     "per scale, single process"),
+        "nodes": NODES,
+        "seed": args.seed,
+        "results": results,
+    }
+    with open(args.output, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.output}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,6 +17,7 @@ O(1/batch) events per task on dispatch.
 """
 from __future__ import annotations
 
+import gc
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional
 
@@ -72,6 +73,13 @@ class AdaptiveRoutingPolicy(RoutingPolicy):
         self.ewma = ewma
         self._rate: Dict[str, float] = {}
         self._last_done: Dict[str, float] = {}
+        # static-fallback memo: super().route() walks the full modality
+        # rule chain; on the hot dispatch path its result only depends on
+        # these description fields, so compute it once per shape (only
+        # when every backend declares accepts_static — see BaseExecutor)
+        self._static_cache: Dict[tuple, str] = {}
+        self._cache_backends_id: Optional[int] = None
+        self._cacheable = False
 
     def observe_completion(self, backend: str, now: float):
         last = self._last_done.get(backend)
@@ -87,11 +95,22 @@ class AdaptiveRoutingPolicy(RoutingPolicy):
         if (d.backend or d.nodes or d.coupling == "tight"
                 or len(backends) == 1):
             return super().route(task, backends)
+        if self._cache_backends_id != id(backends):
+            self._static_cache.clear()
+            self._cache_backends_id = id(backends)
+            self._cacheable = all(getattr(ex, "accepts_static", False)
+                                  for ex in backends.values())
+        if self._cacheable:
+            key = (d.kind, bool(d.executable), d.fn is not None)
+            default = self._static_cache.get(key)
+            if default is None:
+                default = self._static_cache[key] = super().route(task,
+                                                                  backends)
+        else:
+            default = super().route(task, backends)
         eligible = [n for n, ex in backends.items() if ex.accepts(task)]
         if len(eligible) <= 1:
-            return super().route(task, backends)
-
-        default = super().route(task, backends)
+            return default
 
         def wait_estimate(name: str) -> float:
             ex = backends[name]
@@ -133,14 +152,28 @@ class Agent:
         self.tasks: Dict[str, Task] = {}
         self._dispatch_q: deque = deque()
         self._dispatch_busy = False
+        # exact count of tasks in a terminal state (DONE/FAILED/CANCELED):
+        # maintained by _finish plus the cancel sites below, so completion
+        # predicates are O(1) instead of scanning every task per event
         self._n_terminal = 0
         self.ready_at = 0.0
         self.on_task_done: Optional[Callable[[Task], None]] = None
         self._spec_watch: Dict[str, Any] = {}
         self._spec_clones: Dict[str, Task] = {}
+        self._observe_completion = getattr(self.policy, "observe_completion",
+                                           None)
 
         self.backends: Dict[str, BaseExecutor] = {}
         self._build_backends(backends)
+        # routing is memoizable per description shape only when the policy
+        # is the static built-in AND every backend declares accepts() a
+        # pure function of the keyed description fields (accepts_static);
+        # dynamic policies / custom accepts() run route() per task
+        self._route_cache: Optional[Dict[tuple, str]] = (
+            {} if (type(self.policy) is RoutingPolicy
+                   and all(ex.accepts_static
+                           for ex in self.backends.values()))
+            else None)
 
     # ------------------------------------------------------------ construction
     def _build_backends(self, cfg: Dict[str, Dict[str, Any]]):
@@ -172,15 +205,29 @@ class Agent:
     # ---------------------------------------------------------------- submit
     def submit(self, descriptions: List[TaskDescription]) -> List[Task]:
         out = []
-        with self.engine.lock:
-            for d in descriptions:
-                task = Task(d)
-                self.tasks[task.uid] = task
-                task.advance(TaskState.SCHEDULING, self.engine.now(),
-                             self.engine.profiler)
-                self._dispatch_q.append(task)
-                out.append(task)
-            self._pump_dispatch()
+        engine = self.engine
+        with engine.lock:
+            # pause cyclic GC for the bulk ingestion storm: allocating n
+            # tasks otherwise triggers O(n/threshold) generational
+            # collections, each rescanning the growing live set
+            gc_was_enabled = gc.isenabled()
+            if gc_was_enabled:
+                gc.disable()
+            try:
+                now = engine.now
+                profiler = engine.profiler
+                tasks = self.tasks
+                append = self._dispatch_q.append
+                for d in descriptions:
+                    task = Task(d)
+                    tasks[task.uid] = task
+                    task.advance(TaskState.SCHEDULING, now(), profiler)
+                    append(task)
+                    out.append(task)
+                self._pump_dispatch()
+            finally:
+                if gc_was_enabled:
+                    gc.enable()
         return out
 
     def _pump_dispatch(self):
@@ -197,31 +244,68 @@ class Agent:
     def _dispatch_tick(self, budget: int):
         self._dispatch_busy = False
         dispatched = 0
-        while self._dispatch_q and dispatched < budget:
-            task = self._dispatch_q.popleft()
+        q = self._dispatch_q
+        engine = self.engine
+        profiler = engine.profiler
+        backends = self.backends
+        policy_route = self.policy.route
+        route_cache = self._route_cache
+        speculation = self.speculation
+        # route the whole batch first, then hand each backend its bulk in
+        # one submit_many (RP's bulk path); no sim events can fire between
+        # the two passes, so this is equivalent to interleaved submission
+        groups: Dict[str, List[Task]] = {}
+        held = False
+        while q and dispatched < budget:
+            task = q.popleft()
             dispatched += 1
-            if task.state == TaskState.CANCELED:
+            if task.state is TaskState.CANCELED:
                 continue
-            name = self.policy.route(task, self.backends)
-            ex = self.backends[name]
-            wait = max(0.0, getattr(ex, "ready_at", 0.0) - self.engine.now())
+            if route_cache is not None:
+                d = task.description
+                # key covers every description field the static rule chain
+                # and the built-in accepts() predicates read
+                key = (d.backend, d.kind, bool(d.executable), d.cores,
+                       d.gpus, d.nodes, d.coupling, d.fn is not None)
+                name = route_cache.get(key)
+                if name is None:
+                    name = route_cache[key] = policy_route(task, backends)
+            else:
+                name = policy_route(task, backends)
+            ex = backends[name]
+            now = engine.now()
+            wait = getattr(ex, "ready_at", 0.0) - now
             if wait > 0:
                 # backend still bootstrapping: hold and retry at readiness
-                self._dispatch_q.appendleft(task)
-                self.engine.schedule(wait, self._pump_dispatch)
-                return
-            task.advance(TaskState.QUEUED, self.engine.now(),
-                         self.engine.profiler)
-            ex.submit(task)
-            if (self.speculation and task.description.duration > 0
-                    and task.speculative_of is None):   # no clone chains
-                self._arm_speculation(task)
-        self._pump_dispatch()
+                q.appendleft(task)
+                engine.schedule(wait, self._pump_dispatch)
+                held = True
+                break
+            task.advance(TaskState.QUEUED, now, profiler)
+            grp = groups.get(name)
+            if grp is None:
+                groups[name] = [task]
+            else:
+                grp.append(task)
+        for name, bulk in groups.items():
+            backends[name].submit_many(bulk)
+            if speculation:
+                for task in bulk:
+                    if (task.description.duration > 0
+                            and task.speculative_of is None):  # no chains
+                        self._arm_speculation(task)
+        if not held:
+            self._pump_dispatch()
 
     # ------------------------------------------------------------- lifecycle
     def _task_completed(self, task: Task):
-        if hasattr(self.policy, "observe_completion") and task.backend:
-            self.policy.observe_completion(task.backend, self.engine.now())
+        if self._observe_completion is not None and task.backend:
+            self._observe_completion(task.backend, self.engine.now())
+        if self._spec_clones or task.speculative_of:
+            self._resolve_speculation(task)
+        self._finish(task)
+
+    def _resolve_speculation(self, task: Task):
         clone = self._spec_clones.pop(task.uid, None)
         if clone is not None and not clone.done:
             if clone.backend in self.backends:
@@ -230,14 +314,17 @@ class Agent:
                 # clone still in the dispatch queue: cancel it directly
                 clone.advance(TaskState.CANCELED, self.engine.now(),
                               self.engine.profiler)
+            if clone.done:          # canceled without reaching _finish
+                self._n_terminal += 1
         orig_uid = task.speculative_of
         if orig_uid:
             orig = self.tasks.get(orig_uid)
             self._spec_clones.pop(orig_uid, None)
             if orig is not None and not orig.done:
                 self.backends[orig.backend].cancel(orig)
+                if orig.done:       # canceled without reaching _finish
+                    self._n_terminal += 1
                 orig.result = task.result
-        self._finish(task)
 
     def _task_failed(self, task: Task, err: str):
         if task.retries < task.description.max_retries:
@@ -300,9 +387,17 @@ class Agent:
     def _unfinished(self) -> List[Task]:
         return [t for t in self.tasks.values() if not t.done]
 
+    @property
+    def n_unfinished(self) -> int:
+        """Tasks not yet in a terminal state — O(1) via the terminal
+        counter (the drain predicate runs once per engine wakeup)."""
+        return len(self.tasks) - self._n_terminal
+
     def run_until_complete(self, max_events: int = 50_000_000,
                            timeout: Optional[float] = None) -> float:
-        self.engine.drain(lambda: not self._unfinished(),
+        # O(1) predicate via the terminal counter (the old per-wakeup task
+        # list-scan made real-engine drains O(n^2) end-to-end)
+        self.engine.drain(lambda: self._n_terminal >= len(self.tasks),
                           timeout=timeout, max_events=max_events)
         with self.engine.lock:
             unfinished = self._unfinished()

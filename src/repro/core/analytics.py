@@ -4,12 +4,23 @@
 * utilization = busy core-seconds / (allocated cores x makespan),
 * makespan    = first submission -> last completion,
 * overhead    = agent+backend bootstrap before the first launch.
+
+The public functions are numpy-vectorized (sorted-starts sliding window for
+peak throughput, prefix-sum sweep for concurrency) so million-task traces
+are analyzed in milliseconds. The seed pure-Python implementations are kept
+as ``_reference_*`` and pinned by the golden-equivalence tests
+(tests/test_analytics_golden.py): integer fields must match exactly, float
+fields to <=1e-9 relative (numpy's pairwise summation may differ from
+sequential ``sum`` in the last ulp).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
+import numpy as np
+
+from repro.core.calibration import CORES_PER_NODE
 from repro.core.task import Task, TaskState
 
 
@@ -32,6 +43,114 @@ class RunMetrics:
 def compute_metrics(tasks: Sequence[Task], total_cores: int,
                     window: float = 10.0,
                     t_submit0: Optional[float] = None) -> RunMetrics:
+    n_failed = 0
+    starts_raw: List[float] = []
+    ends_raw: List[float] = []
+    cores_raw: List[int] = []
+    for t in tasks:                       # single pass: extract columns
+        state = t.state
+        if state is TaskState.DONE:
+            ts = t.timestamps
+            starts_raw.append(ts.get("RUNNING", 0.0))
+            ends_raw.append(ts["DONE"])
+            d = t.description
+            cores_raw.append(d.nodes * CORES_PER_NODE if d.nodes
+                             else max(1, d.cores))
+        elif state is TaskState.FAILED:
+            n_failed += 1
+    n_done = len(starts_raw)
+    if not n_done:
+        return RunMetrics(len(tasks), 0, n_failed, 0.0, 0.0, 0.0, 0.0,
+                          0.0, 0)
+
+    starts_unsorted = np.asarray(starts_raw)
+    ends = np.asarray(ends_raw)
+    starts = np.sort(starts_unsorted)
+
+    t0 = (t_submit0 if t_submit0 is not None
+          else min(t.timestamps.get("SCHEDULING", 0.0) for t in tasks))
+    start_min = float(starts[0])
+    start_max = float(starts[-1])
+    end_max = float(ends.max())
+    makespan = end_max - t0
+
+    # throughput over the launch window
+    launch_span = start_max - start_min
+    thr_avg = n_done / launch_span if launch_span > 0 else float(n_done)
+    # peak over sliding windows: for each start i, the window tail j is the
+    # first start with starts[i] - starts[j] <= window
+    tail = np.searchsorted(starts, starts - window, side="left")
+    thr_peak = float((np.arange(1, n_done + 1) - tail).max()) / window
+
+    busy = float(((ends - starts_unsorted) * np.asarray(cores_raw)).sum())
+    # utilization over the execution window (first launch -> last completion):
+    # bootstrap is reported separately as `overhead`, matching the paper's
+    # metric split (§4, Fig. 7).
+    exec_window = end_max - start_min
+    util = busy / (total_cores * exec_window) if exec_window > 0 else 0.0
+
+    overhead = start_min - t0
+
+    # peak concurrency: prefix-sum sweep over (time, +-1) events; lexsort
+    # keys replicate the reference tuple ordering (ends before starts at
+    # equal timestamps)
+    times = np.concatenate([starts_unsorted, ends])
+    deltas = np.concatenate([np.ones(n_done, np.int64),
+                             -np.ones(n_done, np.int64)])
+    order = np.lexsort((deltas, times))
+    peak = int(np.cumsum(deltas[order]).max())
+
+    return RunMetrics(len(tasks), n_done, n_failed, makespan,
+                      thr_avg, thr_peak, min(1.0, util), overhead, peak)
+
+
+def concurrency_series(tasks: Sequence[Task], dt: float = 10.0
+                       ) -> List[tuple]:
+    """(t, #running) samples — the paper's Fig. 4/8 green curves."""
+    starts_raw: List[float] = []
+    ends_raw: List[float] = []
+    for t in tasks:
+        ts = t.timestamps
+        if "RUNNING" in ts and ("DONE" in ts or "FAILED" in ts):
+            starts_raw.append(ts["RUNNING"])
+            ends_raw.append(ts.get("DONE", ts.get("FAILED")))
+    if not starts_raw:
+        return []
+    n = len(starts_raw)
+    times = np.concatenate([np.asarray(starts_raw), np.asarray(ends_raw)])
+    deltas = np.concatenate([np.ones(n, np.int64), -np.ones(n, np.int64)])
+    order = np.lexsort((deltas, times))
+    t_sorted = times[order]
+    csum = np.cumsum(deltas[order])
+    t_last = float(t_sorted[-1])
+
+    # sample grid via the same repeated addition as the reference loop so
+    # float accumulation matches bit-for-bit
+    samples: List[float] = []
+    s = 0.0
+    while s <= t_last:
+        samples.append(s)
+        s += dt
+    if samples:
+        # concurrency at sample s = running count after all events < s
+        pos = np.searchsorted(t_sorted, np.asarray(samples), side="left")
+        conc = np.where(pos > 0, csum[pos - 1], 0)
+        out = [(s, int(c)) for s, c in zip(samples, conc)]
+    else:
+        out = []
+    out.append((t_last, 0))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Seed pure-Python implementations, kept verbatim as the golden reference
+# for the vectorized paths above (see tests/test_analytics_golden.py).
+# --------------------------------------------------------------------------
+
+def _reference_compute_metrics(tasks: Sequence[Task], total_cores: int,
+                               window: float = 10.0,
+                               t_submit0: Optional[float] = None
+                               ) -> RunMetrics:
     done = [t for t in tasks if t.state == TaskState.DONE]
     failed = [t for t in tasks if t.state == TaskState.FAILED]
     starts = sorted(t.timestamps.get("RUNNING", 0.0) for t in done)
@@ -44,10 +163,8 @@ def compute_metrics(tasks: Sequence[Task], total_cores: int,
           else min(t.timestamps.get("SCHEDULING", 0.0) for t in tasks))
     makespan = max(ends) - t0
 
-    # throughput over the launch window
     launch_span = max(starts) - min(starts)
     thr_avg = len(starts) / launch_span if launch_span > 0 else float(len(starts))
-    # peak over sliding windows
     thr_peak = 0.0
     j = 0
     for i in range(len(starts)):
@@ -57,20 +174,15 @@ def compute_metrics(tasks: Sequence[Task], total_cores: int,
 
     def cores_of(t: Task) -> int:
         d = t.description
-        from repro.core.calibration import CORES_PER_NODE
         return d.nodes * CORES_PER_NODE if d.nodes else max(1, d.cores)
 
     busy = sum((t.timestamps["DONE"] - t.timestamps["RUNNING"]) * cores_of(t)
                for t in done)
-    # utilization over the execution window (first launch -> last completion):
-    # bootstrap is reported separately as `overhead`, matching the paper's
-    # metric split (§4, Fig. 7).
     exec_window = max(ends) - min(starts)
     util = busy / (total_cores * exec_window) if exec_window > 0 else 0.0
 
     overhead = min(starts) - t0
 
-    # peak concurrency via sweep
     events = sorted([(s, 1) for s in starts]
                     + [(t.timestamps["DONE"], -1) for t in done])
     cur = peak = 0
@@ -82,9 +194,8 @@ def compute_metrics(tasks: Sequence[Task], total_cores: int,
                       thr_avg, thr_peak, min(1.0, util), overhead, peak)
 
 
-def concurrency_series(tasks: Sequence[Task], dt: float = 10.0
-                       ) -> List[tuple]:
-    """(t, #running) samples — the paper's Fig. 4/8 green curves."""
+def _reference_concurrency_series(tasks: Sequence[Task], dt: float = 10.0
+                                  ) -> List[tuple]:
     done = [t for t in tasks if "RUNNING" in t.timestamps and
             ("DONE" in t.timestamps or "FAILED" in t.timestamps)]
     if not done:

@@ -1,43 +1,186 @@
 """Event recording (RADICAL-Analytics style): every state transition and
 runtime action is a timestamped event; the metrics pipeline (analytics.py)
-derives throughput/utilization/makespan purely from this trace."""
+derives throughput/utilization/makespan purely from the task/event trace.
+
+The trace is **columnar** (struct-of-arrays): the hot path appends to two
+parallel columns — a float64 time column and an int64 column packing the
+interned entity id and name id of the event — and stores optional payloads
+in a sparse side dict. Nothing else happens per event: no object
+allocation, no secondary indexing. Million-task campaigns therefore pay two
+C-level array appends per state transition instead of a heap-allocated
+dataclass plus an eager by-name index insert.
+
+``record`` interns its strings per call; state machines on the hot path use
+``entity_id`` once per entity plus ``record_fast`` per event to skip even
+the interning lookups (see task.Task.advance).
+
+Per-`Event` views and the by-name index are materialized lazily, on first
+access, and only extended incrementally afterwards — pure-throughput runs
+that never inspect the trace never build them.
+"""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Dict, Iterable, List, Optional
+from array import array
+from typing import Any, Dict, Iterator, List, Optional
+
+_NAME_BITS = 20                      # <=1M distinct event names
+_NAME_MASK = (1 << _NAME_BITS) - 1
 
 
-@dataclass
 class Event:
-    time: float
-    entity: str          # task/pilot/executor uid
-    name: str            # e.g. "state:RUNNING", "exec:launch", "agent:dispatch"
-    data: Optional[Dict[str, Any]] = None
+    """Lightweight per-event view over one trace row (backward-compat
+    surface; the authoritative storage is the Profiler's columns)."""
+
+    __slots__ = ("time", "entity", "name", "data")
+
+    def __init__(self, time: float, entity: str, name: str,
+                 data: Optional[Dict[str, Any]] = None):
+        self.time = time
+        self.entity = entity
+        self.name = name
+        self.data = data
+
+    def __eq__(self, other):
+        return (isinstance(other, Event)
+                and self.time == other.time and self.entity == other.entity
+                and self.name == other.name and self.data == other.data)
+
+    def __repr__(self):
+        return (f"Event(time={self.time!r}, entity={self.entity!r}, "
+                f"name={self.name!r}, data={self.data!r})")
 
 
 class Profiler:
-    """Append-only event trace with simple indexing."""
+    """Append-only columnar event trace with lazy secondary indexing."""
 
     def __init__(self):
-        self.events: List[Event] = []
-        self._by_name: Dict[str, List[Event]] = {}
+        self._times = array("d")          # event timestamps
+        self._ids = array("q")            # (entity_id << _NAME_BITS) | name_id
+        self._entities: List[str] = []    # entity id -> string
+        self._names: List[str] = []       # name id -> string
+        self._entity_ids: Dict[str, int] = {}
+        self._name_ids: Dict[str, int] = {}
+        self._data: Dict[int, Any] = {}   # sparse: row -> payload
+        # generic memo for hot callers caching name ids keyed by their own
+        # tokens (e.g. task.py keys it by TaskState)
+        self.memo_nids: Dict[Any, int] = {}
+        # lazy caches (built on demand, extended incrementally)
+        self._by_name: Dict[int, List[int]] = {}   # name id -> row indices
+        self._indexed_rows = 0
+        self._events_view: List[Event] = []
+
+    # ------------------------------------------------------------ interning
+    def entity_id(self, entity: str) -> int:
+        eid = self._entity_ids.get(entity)
+        if eid is None:
+            eid = self._entity_ids[entity] = len(self._entities)
+            self._entities.append(entity)
+        return eid
+
+    def name_id(self, name: str) -> int:
+        nid = self._name_ids.get(name)
+        if nid is None:
+            nid = len(self._names)
+            if nid > _NAME_MASK:
+                raise OverflowError("Profiler: too many distinct event "
+                                    "names (id space exhausted)")
+            self._name_ids[name] = nid
+            self._names.append(name)
+        return nid
+
+    # ------------------------------------------------------------- hot path
+    def record_fast(self, time: float, eid: int, nid: int) -> None:
+        """Append one payload-free event from pre-interned ids: two C-level
+        array appends, nothing else."""
+        self._times.append(time)
+        self._ids.append((eid << _NAME_BITS) | nid)
 
     def record(self, time: float, entity: str, name: str,
-               data: Optional[Dict[str, Any]] = None) -> Event:
-        ev = Event(time, entity, name, data)
-        self.events.append(ev)
-        self._by_name.setdefault(name, []).append(ev)
-        return ev
+               data: Optional[Dict[str, Any]] = None) -> int:
+        """Append one event; returns its row index."""
+        row = len(self._times)
+        self._times.append(time)
+        self._ids.append((self.entity_id(entity) << _NAME_BITS)
+                         | self.name_id(name))
+        if data:
+            self._data[row] = data
+        return row
+
+    # ------------------------------------------------------------- queries
+    def _event_at(self, row: int) -> Event:
+        packed = self._ids[row]
+        return Event(self._times[row],
+                     self._entities[packed >> _NAME_BITS],
+                     self._names[packed & _NAME_MASK],
+                     self._data.get(row))
+
+    def _name_index(self) -> Dict[int, List[int]]:
+        """Extend the lazy name -> rows index to cover all recorded rows."""
+        n = len(self._times)
+        if self._indexed_rows < n:
+            index = self._by_name
+            ids = self._ids
+            for row in range(self._indexed_rows, n):
+                nid = ids[row] & _NAME_MASK
+                rows = index.get(nid)
+                if rows is None:
+                    index[nid] = [row]
+                else:
+                    rows.append(row)
+            self._indexed_rows = n
+        return self._by_name
+
+    def rows_by_name(self, name: str) -> List[int]:
+        nid = self._name_ids.get(name)
+        if nid is None:
+            return []
+        return self._name_index().get(nid, [])
 
     def by_name(self, name: str) -> List[Event]:
-        return self._by_name.get(name, [])
+        return [self._event_at(r) for r in self.rows_by_name(name)]
 
     def times(self, name: str) -> List[float]:
-        return [e.time for e in self.by_name(name)]
+        times = self._times
+        return [times[r] for r in self.rows_by_name(name)]
 
     def window(self, name: str) -> Optional[tuple]:
         ts = self.times(name)
         return (min(ts), max(ts)) if ts else None
 
+    def counts_by_name(self) -> Dict[str, int]:
+        index = self._name_index()
+        return {self._names[nid]: len(rows) for nid, rows in index.items()}
+
+    # --------------------------------------------------- columnar accessors
+    def time_column(self) -> array:
+        """The raw float64 time column (do not mutate)."""
+        return self._times
+
+    def id_column(self) -> array:
+        """The raw packed id column (do not mutate): each element is
+        ``(entity_id << 20) | name_id``; decode through ``entity_of`` /
+        ``name_of``."""
+        return self._ids
+
+    def name_of(self, nid: int) -> str:
+        return self._names[nid]
+
+    def entity_of(self, eid: int) -> str:
+        return self._entities[eid]
+
+    # ----------------------------------------------------------- view compat
+    @property
+    def events(self) -> List[Event]:
+        """Per-`Event` view of the whole trace, materialized lazily and
+        extended incrementally across calls."""
+        view = self._events_view
+        n = len(self._times)
+        if len(view) < n:
+            view.extend(self._event_at(r) for r in range(len(view), n))
+        return view
+
+    def __iter__(self) -> Iterator[Event]:
+        return iter(self.events)
+
     def __len__(self):
-        return len(self.events)
+        return len(self._times)

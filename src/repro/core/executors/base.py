@@ -22,6 +22,13 @@ class BaseExecutor(ABC):
     """Common executor surface for sim and real modes."""
 
     kind: str = "base"
+    # Declares that accepts() is a pure function of the description fields
+    # (backend, kind, executable, cores, gpus, nodes, coupling, fn) — the
+    # agent only memoizes routing decisions when every backend declares
+    # this. Deliberately False here: a registry-added executor with a
+    # dynamic accepts() (queue state, other fields) stays correct by
+    # default and pays a per-task route() instead.
+    accepts_static: bool = False
 
     def __init__(self, name: str):
         self.name = name
@@ -38,6 +45,13 @@ class BaseExecutor(ABC):
 
     @abstractmethod
     def submit(self, task: Task) -> None: ...
+
+    def submit_many(self, tasks: List[Task]) -> None:
+        """Bulk submission (RP's task-manager bulk path). Backends override
+        to enqueue the whole bulk and fan out launch attempts once instead
+        of per task."""
+        for task in tasks:
+            self.submit(task)
 
     @abstractmethod
     def cancel(self, task: Task) -> None: ...
@@ -78,6 +92,20 @@ class BaseExecutor(ABC):
     def total_cores(self) -> int: ...
 
 
+class QueueState:
+    """Shared change counters for a (possibly shared) backlog: ``head``
+    advances when an entry is permanently removed from the front region
+    (launch or canceled-drop), ``tail`` when one is appended. Launch
+    servers use them to skip backfill rescans that provably cannot launch
+    anything (see SimLaunchServer.pump)."""
+
+    __slots__ = ("head", "tail")
+
+    def __init__(self):
+        self.head = 0
+        self.tail = 0
+
+
 class SimLaunchServer:
     """Single launch server + resource pool + optional admission gate."""
 
@@ -87,7 +115,8 @@ class SimLaunchServer:
                  on_admit: Optional[Callable[[Task], None]] = None,
                  on_release: Optional[Callable[[Task], None]] = None,
                  queue: Optional[Deque[Task]] = None,
-                 scan_limit: int = 64):
+                 scan_limit: int = 64,
+                 qstate: Optional[QueueState] = None):
         self.engine = engine
         self.name = name
         self.pool = pool
@@ -106,66 +135,115 @@ class SimLaunchServer:
         self.on_complete: Optional[Callable[[Task], None]] = None
         self.on_failure: Optional[Callable[[Task, str], None]] = None
         self._completion_events: Dict[str, object] = {}
+        self._qstate = qstate if qstate is not None else QueueState()
+        # stall memo: (head, tail) snapshot of the last fruitless scan;
+        # tail -1 means "full window examined, appends can't help"
+        self._stall_head: Optional[int] = None
+        self._stall_tail = -1
+        # cached bound methods: the launch/complete callbacks are scheduled
+        # once per task, so avoid re-binding them on every schedule() call
+        self._launched_cb = self._launched
+        self._complete_cb = self._complete
 
     # -------------------------------------------------------------- submit
     def submit(self, task: Task):
         assert not self.dead, f"{self.name}: submit to dead server"
         self.queue.append(task)
+        self._qstate.tail += 1
         self.pump()
 
     def pump(self):
         if self.busy or self.dead:
             return
-        # bounded backfill: first queued task that fits & passes admission
-        for i, task in enumerate(self.queue):
-            if i >= self.scan_limit:
-                break
-            if task.state == TaskState.CANCELED:
-                continue
-            if self.admission is not None and not self.admission(task):
-                continue
-            alloc = self.pool.alloc(task.description)
-            if alloc is None:
-                continue
-            del self.queue[i]
-            self._launch(task, alloc)
+        q = self.queue
+        if not q:
             return
+        qs = self._qstate
+        # Stall fast-exit: if the last scan launched nothing and neither
+        # this server's pool nor the visible queue window changed since,
+        # rescanning cannot succeed either — skip the O(scan_limit) pass.
+        # Gated on `admission is None` because admission gates read state
+        # (e.g. platform srun slots) that can change outside this server.
+        if (self._stall_head == qs.head
+                and (self._stall_tail == -1 or self._stall_tail == qs.tail)
+                and self.admission is None):
+            return
+        # Bounded FIFO-with-backfill scan, O(1) queue ops: pop candidates
+        # off the front, park the ones that don't fit, and splice the parked
+        # prefix back in order afterwards. Canceled entries are dropped for
+        # free as they surface. Launches proceed greedily until the launch
+        # pipeline is busy, the backfill window is exhausted, or the queue
+        # drains (the single-server model sets ``busy`` per launch, so the
+        # launch *rate* is still governed by the service time).
+        deferred: List[Task] = []
+        scanned = 0
+        launched = False
+        limit = self.scan_limit
+        admission = self.admission
+        alloc_fn = self.pool.alloc
+        while q and scanned < limit and not self.busy:
+            task = q.popleft()
+            scanned += 1
+            if task.state is TaskState.CANCELED:
+                qs.head += 1               # dropped: window shifts for all
+                continue
+            if admission is not None and not admission(task):
+                deferred.append(task)
+                continue
+            alloc = alloc_fn(task.description)
+            if alloc is None:
+                deferred.append(task)
+                continue
+            qs.head += 1                   # removed: window shifts for all
+            launched = True
+            self._launch(task, alloc)
+        if deferred:
+            q.extendleft(reversed(deferred))
+        if launched:
+            self._stall_head = None
+        else:
+            self._stall_head = qs.head
+            self._stall_tail = -1 if scanned >= limit else qs.tail
 
     def _launch(self, task: Task, alloc: Allocation):
+        engine = self.engine
         task.allocation = alloc
         if self.on_admit:
             self.on_admit(task)
-        task.advance(TaskState.LAUNCHING, self.engine.now(),
-                     self.engine.profiler)
+        task.advance(TaskState.LAUNCHING, engine.now(), engine.profiler)
         self.busy = True
-        svc = max(1e-6, self.service_time_fn(task))
-        self.engine.schedule(svc, self._launched, task)
+        svc = self.service_time_fn(task)
+        engine.schedule(svc if svc > 1e-6 else 1e-6, self._launched_cb, task)
 
     def _launched(self, task: Task):
         self.busy = False
         if self.dead:
             return
-        if task.state == TaskState.CANCELED:
+        engine = self.engine
+        if task.state is TaskState.CANCELED:
             self._release(task)
+            self._stall_head = None        # pool changed: rescan
             self.pump()
             return
-        task.advance(TaskState.RUNNING, self.engine.now(),
-                     self.engine.profiler)
+        task.advance(TaskState.RUNNING, engine.now(), engine.profiler)
         self.running[task.uid] = task
-        dur = self.engine.actual_duration(task)
-        ev = self.engine.schedule(dur, self._complete, task)
+        dur = engine.actual_duration(task)
+        ev = engine.schedule(dur, self._complete_cb, task)
         self._completion_events[task.uid] = ev
         self.pump()
 
     def _complete(self, task: Task):
-        if self.dead or task.uid not in self.running:
+        if self.dead:
             return
-        del self.running[task.uid]
-        self._completion_events.pop(task.uid, None)
+        uid = task.uid
+        if self.running.pop(uid, None) is None:
+            return
+        self._completion_events.pop(uid, None)
         self._release(task)
-        if task.state == TaskState.RUNNING:
-            task.advance(TaskState.DONE, self.engine.now(),
-                         self.engine.profiler)
+        self._stall_head = None            # pool changed: rescan
+        if task.state is TaskState.RUNNING:
+            engine = self.engine
+            task.advance(TaskState.DONE, engine.now(), engine.profiler)
             if self.on_complete:
                 self.on_complete(task)
         self.pump()
@@ -185,16 +263,17 @@ class SimLaunchServer:
             if ev is not None:
                 ev.cancel()
             self._release(task)
+            self._stall_head = None        # pool changed: rescan
             task.advance(TaskState.CANCELED, self.engine.now(),
                          self.engine.profiler)
             self.pump()
-        else:
-            try:
-                self.queue.remove(task)
-                task.advance(TaskState.CANCELED, self.engine.now(),
-                             self.engine.profiler)
-            except ValueError:
-                pass
+        elif task.state in (TaskState.QUEUED, TaskState.LAUNCHING):
+            # lazy dequeue: mark terminal now; pump drops the queue entry in
+            # O(1) when it surfaces (deque.remove would be O(n) per cancel).
+            # A mid-launch task is released by _launched on its CANCELED
+            # state.
+            task.advance(TaskState.CANCELED, self.engine.now(),
+                         self.engine.profiler)
 
     def kill(self) -> List[Task]:
         """Server dies: running tasks fail; queued tasks are handed back

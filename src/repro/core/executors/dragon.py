@@ -14,7 +14,7 @@ from typing import List
 
 from repro.core import calibration as CAL
 from repro.core.executors.base import (BaseExecutor, CoordinationLimiter,
-                                        SimLaunchServer)
+                                        QueueState, SimLaunchServer)
 from repro.core.resources import NodePool, NodeSpec, partition_nodes
 from repro.core.task import Task, TaskState
 from repro.runtime.registry import register_executor
@@ -22,6 +22,7 @@ from repro.runtime.registry import register_executor
 
 class SimDragonExecutor(BaseExecutor):
     kind = "dragon"
+    accepts_static = True
 
     def __init__(self, engine, n_nodes: int, n_partitions: int = 1,
                  spec: NodeSpec = NodeSpec(cores=CAL.CORES_PER_NODE,
@@ -34,13 +35,14 @@ class SimDragonExecutor(BaseExecutor):
         self.spec = spec
         self.instances: List[SimLaunchServer] = []
         self.backlog = deque()
+        self._qstate = QueueState()          # shared backlog change counters
         self.coord = CoordinationLimiter(engine, n_nodes, self.n_partitions)
         pools = partition_nodes(n_nodes, self.n_partitions, spec)
         for i, pool in enumerate(pools):
             inst = SimLaunchServer(
                 engine, f"{name}.inst{i}", pool,
                 service_time_fn=self._service_time_fn(pool.n_nodes),
-                queue=self.backlog)
+                queue=self.backlog, qstate=self._qstate)
             inst.on_complete = self._completed
             inst.on_failure = self._failed
             self.instances.append(inst)
@@ -63,8 +65,23 @@ class SimDragonExecutor(BaseExecutor):
     def submit(self, task: Task):
         task.backend = self.name
         self.backlog.append(task)
+        self._qstate.tail += 1
         for inst in self.instances:
-            if not inst.dead:
+            if not inst.busy and not inst.dead:
+                inst.pump()
+
+    def submit_many(self, tasks: List[Task]):
+        """Bulk path: enqueue the whole bulk, then fan launch attempts out
+        across idle instances once."""
+        name = self.name
+        backlog = self.backlog
+        qstate = self._qstate
+        for task in tasks:
+            task.backend = name
+            backlog.append(task)
+            qstate.tail += 1
+        for inst in self.instances:
+            if not inst.busy and not inst.dead:
                 inst.pump()
 
     def cancel(self, task: Task):
@@ -72,12 +89,11 @@ class SimDragonExecutor(BaseExecutor):
             if task.uid in inst.running:
                 inst.cancel(task)
                 return
-        try:
-            self.backlog.remove(task)
+        if task.state in (TaskState.QUEUED, TaskState.LAUNCHING):
+            # lazy dequeue: the backlog entry is dropped in O(1) when an
+            # instance's backfill scan reaches it
             task.advance(TaskState.CANCELED, self.engine.now(),
                          self.engine.profiler)
-        except ValueError:
-            pass
 
     def fail_instance(self, idx: int) -> List[Task]:
         orphans = self.instances[idx].kill()

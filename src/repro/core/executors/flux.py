@@ -14,7 +14,7 @@ from typing import List, Optional
 
 from repro.core import calibration as CAL
 from repro.core.executors.base import (BaseExecutor, CoordinationLimiter,
-                                        SimLaunchServer)
+                                        QueueState, SimLaunchServer)
 from repro.core.resources import NodePool, NodeSpec, partition_nodes
 from repro.core.task import Task, TaskState
 from repro.runtime.registry import register_executor
@@ -22,6 +22,7 @@ from repro.runtime.registry import register_executor
 
 class SimFluxExecutor(BaseExecutor):
     kind = "flux"
+    accepts_static = True
 
     def __init__(self, engine, n_nodes: int, n_partitions: int = 1,
                  spec: NodeSpec = NodeSpec(cores=CAL.CORES_PER_NODE,
@@ -34,6 +35,7 @@ class SimFluxExecutor(BaseExecutor):
         self.spec = spec
         self.instances: List[SimLaunchServer] = []
         self.backlog = deque()               # shared: late binding across instances
+        self._qstate = QueueState()          # shared backlog change counters
         self.coord = CoordinationLimiter(engine, n_nodes, self.n_partitions)
         pools = partition_nodes(n_nodes, self.n_partitions, spec)
         for i, pool in enumerate(pools):
@@ -43,10 +45,11 @@ class SimFluxExecutor(BaseExecutor):
                 service_time_fn=(lambda r: lambda t: max(
                     engine.noisy(1.0 / r, sigma=CAL.FLUX_RATE_SIGMA),
                     self.coord.reserve()))(rate),
-                queue=self.backlog)
+                queue=self.backlog, qstate=self._qstate)
             inst.on_complete = self._completed
             inst.on_failure = self._failed
             self.instances.append(inst)
+        self._live: List[SimLaunchServer] = list(self.instances)
 
     # ------------------------------------------------------------------ boot
     def start(self) -> float:
@@ -59,12 +62,38 @@ class SimFluxExecutor(BaseExecutor):
 
     # ---------------------------------------------------------------- routing
     def _live_instances(self) -> List[SimLaunchServer]:
-        return [i for i in self.instances if not i.dead]
+        return self._live
+
+    def _refresh_live(self):
+        self._live = [i for i in self.instances if not i.dead]
 
     def submit(self, task: Task):
         task.backend = self.name
-        live = self._live_instances()
+        live = self._live
         assert live, f"{self.name}: no live instances"
+        if not self._enqueue(task, live):
+            return
+        # late binding: enqueue once on the shared backlog; the first
+        # instance with free resources and a free launcher takes it (busy
+        # launchers re-pump themselves on their next pipeline event)
+        for inst in live:
+            if not inst.busy:
+                inst.pump()
+
+    def submit_many(self, tasks: List[Task]):
+        """Bulk path: enqueue the whole bulk, then fan launch attempts out
+        across idle instances once (equivalent to per-task submission —
+        no sim events fire between the appends)."""
+        live = self._live
+        assert live, f"{self.name}: no live instances"
+        for task in tasks:
+            task.backend = self.name
+            self._enqueue(task, live)
+        for inst in live:
+            if not inst.busy:
+                inst.pump()
+
+    def _enqueue(self, task: Task, live) -> bool:
         if task.description.nodes and not any(
                 i.pool.n_nodes >= task.description.nodes for i in live):
             task.error = (f"no partition with "
@@ -73,30 +102,28 @@ class SimFluxExecutor(BaseExecutor):
                          self.engine.profiler)
             if self.on_failure:
                 self.on_failure(task, task.error)
-            return
-        # late binding: enqueue once on the shared backlog; the first
-        # instance with free resources and a free launcher takes it
+            return False
         self.backlog.append(task)
-        for inst in live:
-            inst.pump()
+        self._qstate.tail += 1
+        return True
 
     def cancel(self, task: Task):
         for inst in self.instances:
             if task.uid in inst.running:
                 inst.cancel(task)
                 return
-        try:
-            self.backlog.remove(task)
+        if task.state in (TaskState.QUEUED, TaskState.LAUNCHING):
+            # lazy dequeue: the backlog entry is dropped in O(1) when an
+            # instance's backfill scan reaches it
             task.advance(TaskState.CANCELED, self.engine.now(),
                          self.engine.profiler)
-        except ValueError:
-            pass
 
     # ---------------------------------------------------------------- faults
     def fail_instance(self, idx: int) -> List[Task]:
         """Kill one instance; returns orphaned queued tasks (the agent
         reroutes them). Running tasks FAIL via on_failure."""
         orphans = self.instances[idx].kill()
+        self._refresh_live()
         self.engine.release_srun_slot()
         self.engine.profiler.record(self.engine.now(),
                                     f"{self.name}.inst{idx}",
@@ -116,10 +143,11 @@ class SimFluxExecutor(BaseExecutor):
                 service_time_fn=lambda t: max(
                     self.engine.noisy(1.0 / rate, sigma=CAL.FLUX_RATE_SIGMA),
                     self.coord.reserve()),
-                queue=self.backlog)
+                queue=self.backlog, qstate=self._qstate)
             inst.on_complete = self._completed
             inst.on_failure = self._failed
             self.instances[idx] = inst
+            self._refresh_live()
             inst.pump()
             if self.engine.srun_slots_free > 0:
                 self.engine.take_srun_slot()

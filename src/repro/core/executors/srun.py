@@ -19,6 +19,7 @@ from repro.runtime.registry import register_executor
 
 class SimSrunExecutor(BaseExecutor):
     kind = "srun"
+    accepts_static = True
 
     def __init__(self, engine, n_nodes: int,
                  spec: NodeSpec = NodeSpec(cores=CAL.CORES_PER_NODE,

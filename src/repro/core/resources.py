@@ -68,8 +68,20 @@ class NodePool:
             return alloc
         # packed cores/gpus (may not span nodes for simplicity: per-node fit)
         need_c, need_g = td.cores, td.gpus
+        if need_c == 1 and need_g == 0:
+            # fast path: the paper's dominant load is 1-core 0-gpu tasks;
+            # first-fit reduces to "first node with a free core"
+            free_cores = self.free_cores
+            for n, c in free_cores.items():
+                if c > 0:
+                    if commit:
+                        free_cores[n] = c - 1
+                    return Allocation(node_cores={n: 1})
+            return None
         alloc = Allocation()
-        for n in sorted(self.free_cores):
+        # node ids are inserted ascending at construction and never removed,
+        # so plain dict order IS first-fit order — no per-alloc sort
+        for n in self.free_cores:
             if need_c <= 0 and need_g <= 0:
                 break
             c = min(self.free_cores[n], need_c)

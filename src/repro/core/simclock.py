@@ -4,7 +4,9 @@ simulation of 4-1024 node allocations) and a wall clock (real execution).
 Both expose ``now()`` and ``schedule(delay, fn, *args)``; the engine decides
 which to drive. The virtual clock is a classic event heap with stable FIFO
 tie-breaking, cancelable events, and watchdog-safe reentrancy (callbacks may
-schedule/cancel freely).
+schedule/cancel freely). Heap entries are ``(time, seq, handle)`` tuples so
+sift comparisons run entirely in C (the unique ``seq`` guarantees the handle
+is never compared), and a live-event counter makes ``pending`` O(1).
 """
 from __future__ import annotations
 
@@ -16,20 +18,22 @@ from typing import Callable, List, Optional, Tuple
 
 
 class ScheduledEvent:
-    __slots__ = ("time", "seq", "fn", "args", "canceled")
+    """Cancelation handle for a scheduled callback. ``canceled`` doubles as
+    the consumed flag once the event fires, keeping ``cancel`` idempotent
+    and the clock's live counter exact."""
 
-    def __init__(self, t: float, seq: int, fn: Callable, args: tuple):
-        self.time = t
-        self.seq = seq
+    __slots__ = ("fn", "args", "canceled", "_clock")
+
+    def __init__(self, fn: Callable, args: tuple, clock: "VirtualClock"):
         self.fn = fn
         self.args = args
         self.canceled = False
+        self._clock = clock
 
     def cancel(self):
-        self.canceled = True
-
-    def __lt__(self, other):
-        return (self.time, self.seq) < (other.time, other.seq)
+        if not self.canceled:
+            self.canceled = True
+            self._clock._live -= 1
 
 
 class VirtualClock:
@@ -37,32 +41,40 @@ class VirtualClock:
 
     def __init__(self, start: float = 0.0):
         self._now = start
-        self._heap: List[ScheduledEvent] = []
+        self._heap: List[Tuple[float, int, ScheduledEvent]] = []
         self._seq = itertools.count()
+        self._live = 0
+        self.fired_total = 0
 
     def now(self) -> float:
         return self._now
 
     def schedule(self, delay: float, fn: Callable, *args) -> ScheduledEvent:
-        ev = ScheduledEvent(self._now + max(0.0, delay), next(self._seq), fn, args)
-        heapq.heappush(self._heap, ev)
+        ev = ScheduledEvent(fn, args, self)
+        t = self._now + delay if delay > 0.0 else self._now
+        heapq.heappush(self._heap, (t, next(self._seq), ev))
+        self._live += 1
         return ev
 
     def run(self, until: Optional[float] = None, max_events: int = 50_000_000
             ) -> int:
         """Drain events (up to ``until`` if given). Returns #events fired."""
         fired = 0
-        while self._heap and fired < max_events:
-            ev = self._heap[0]
-            if until is not None and ev.time > until:
+        heap = self._heap
+        pop = heapq.heappop
+        while heap and fired < max_events:
+            if until is not None and heap[0][0] > until:
                 break
-            heapq.heappop(self._heap)
+            t, _, ev = pop(heap)
             if ev.canceled:
                 continue
-            self._now = ev.time
+            ev.canceled = True            # consumed: cancel() is now a no-op
+            self._live -= 1
+            self._now = t
             ev.fn(*ev.args)
             fired += 1
-        if until is not None and self._now < until and not self._heap:
+        self.fired_total += fired
+        if until is not None and self._now < until and not heap:
             self._now = until
         if fired >= max_events:
             raise RuntimeError("VirtualClock: event budget exhausted "
@@ -71,15 +83,23 @@ class VirtualClock:
 
     @property
     def pending(self) -> int:
-        return sum(1 for e in self._heap if not e.canceled)
+        return self._live
 
 
 class RealClock:
     """Wall clock; schedule() uses daemon timer threads."""
 
+    # dead timers are pruned in batches: the liveness filter is O(n), so
+    # rebuilding the list on every schedule() turns sustained scheduling
+    # into O(n^2) — amortize it by pruning only once the list has doubled
+    # since the last prune (stays amortized-O(1) even with many timers
+    # simultaneously alive)
+    PRUNE_THRESHOLD = 256
+
     def __init__(self):
         self._t0 = time.monotonic()
         self._timers: List[threading.Timer] = []
+        self._prune_at = self.PRUNE_THRESHOLD
 
     def now(self) -> float:
         return time.monotonic() - self._t0
@@ -88,7 +108,10 @@ class RealClock:
         t = threading.Timer(max(0.0, delay), fn, args=args)
         t.daemon = True
         t.start()
-        self._timers = [p for p in self._timers if p.is_alive()]
+        if len(self._timers) >= self._prune_at:
+            self._timers = [p for p in self._timers if p.is_alive()]
+            self._prune_at = max(self.PRUNE_THRESHOLD,
+                                 2 * len(self._timers))
         self._timers.append(t)
         return t
 

@@ -1,6 +1,12 @@
 """Task abstraction: description + state machine, mirroring RADICAL-Pilot's
 task lifecycle. Transitions are validated; every transition is timestamped
-for the analytics pipeline."""
+for the analytics pipeline.
+
+``advance`` is the hottest call in a simulation (5-6 per task); everything
+it needs per transition — the legal-transition table, the overwrite set,
+the interned ``state:*`` event names — is precomputed at module load so the
+steady state allocates nothing (the executing backend is recoverable from
+``task.backend``; it is not duplicated into each trace event)."""
 from __future__ import annotations
 
 import itertools
@@ -36,14 +42,20 @@ _LEGAL: Dict[TaskState, set] = {
     TaskState.CANCELED: set(),
 }
 
+# first-transition timestamp wins for stable metrics on retries, except
+# RUNNING/LAUNCHING/terminal which reflect the final attempt
+_TS_OVERWRITE = TERMINAL | {TaskState.RUNNING, TaskState.LAUNCHING}
+_STATE_KEY = {s: s.value for s in TaskState}
+_STATE_EVENT = {s: f"state:{s.value}" for s in TaskState}
+
 _uid_counter = itertools.count()
 
 
 def new_uid(prefix: str = "task") -> str:
-    return f"{prefix}.{next(_uid_counter):06d}"
+    return "%s.%06d" % (prefix, next(_uid_counter))
 
 
-@dataclass
+@dataclass(init=False)
 class TaskDescription:
     uid: str = ""
     kind: str = "executable"            # executable | function
@@ -62,11 +74,32 @@ class TaskDescription:
     workflow: str = ""
     max_retries: int = 0
 
-    def __post_init__(self):
-        if not self.uid:
-            self.uid = new_uid()
-        if self.nodes and self.coupling == "loose":
-            self.coupling = "tight"
+    # hand-written __init__ (same signature/defaults as the generated one,
+    # __post_init__ folded in): descriptions are created once per task, so
+    # their construction is a measurable slice of million-task campaigns
+    def __init__(self, uid: str = "", kind: str = "executable",
+                 cores: int = 1, gpus: int = 0, nodes: int = 0,
+                 duration: float = 0.0, fn: Optional[Callable] = None,
+                 args: Tuple = (), kwargs: Optional[Dict[str, Any]] = None,
+                 executable: str = "", arguments: Tuple = (),
+                 coupling: str = "loose", backend: Optional[str] = None,
+                 stage: str = "", workflow: str = "", max_retries: int = 0):
+        self.uid = uid or new_uid()
+        self.kind = kind
+        self.cores = cores
+        self.gpus = gpus
+        self.nodes = nodes
+        self.duration = duration
+        self.fn = fn
+        self.args = args
+        self.kwargs = kwargs if kwargs is not None else {}
+        self.executable = executable
+        self.arguments = arguments
+        self.coupling = "tight" if (nodes and coupling == "loose") else coupling
+        self.backend = backend
+        self.stage = stage
+        self.workflow = workflow
+        self.max_retries = max_retries
 
 
 class InvalidTransition(RuntimeError):
@@ -74,6 +107,10 @@ class InvalidTransition(RuntimeError):
 
 
 class Task:
+    __slots__ = ("description", "uid", "state", "timestamps", "retries",
+                 "result", "error", "backend", "partition", "allocation",
+                 "speculative_of", "_trace_eid", "_trace_prof")
+
     def __init__(self, description: TaskDescription):
         self.description = description
         self.uid = description.uid
@@ -86,21 +123,29 @@ class Task:
         self.partition: Optional[int] = None
         self.allocation: Any = None              # resource bookkeeping handle
         self.speculative_of: Optional[str] = None
+        self._trace_eid = -1                     # interned uid, per profiler
+        self._trace_prof = None
 
     def advance(self, state: TaskState, t: float, profiler=None):
         if state not in _LEGAL[self.state]:
             raise InvalidTransition(
                 f"{self.uid}: {self.state.value} -> {state.value}")
         self.state = state
-        # first-transition timestamp wins for stable metrics on retries,
-        # except RUNNING/terminal which reflect the final attempt
-        key = state.value
-        if key not in self.timestamps or state in TERMINAL | {TaskState.RUNNING,
-                                                              TaskState.LAUNCHING}:
-            self.timestamps[key] = t
+        ts = self.timestamps
+        key = _STATE_KEY[state]
+        if state in _TS_OVERWRITE or key not in ts:
+            ts[key] = t
         if profiler is not None:
-            profiler.record(t, self.uid, f"state:{state.value}",
-                            {"backend": self.backend})
+            # columnar fast path: intern this task's uid and the profiler's
+            # state:* name ids once, then each transition is two C appends
+            if self._trace_prof is not profiler:
+                self._trace_prof = profiler
+                self._trace_eid = profiler.entity_id(self.uid)
+            nids = profiler.memo_nids
+            nid = nids.get(state)
+            if nid is None:
+                nid = nids[state] = profiler.name_id(_STATE_EVENT[state])
+            profiler.record_fast(t, self._trace_eid, nid)
 
     @property
     def done(self) -> bool:

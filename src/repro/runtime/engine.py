@@ -17,12 +17,15 @@ pipeline over interchangeable runtime backends.
 """
 from __future__ import annotations
 
+import gc
 import math
 import random
 import threading
 import time
 from abc import ABC, abstractmethod
 from typing import Callable, Optional
+
+import numpy as np
 
 from repro.core import calibration as CAL
 from repro.core.events import Profiler
@@ -43,6 +46,12 @@ class Engine(ABC):
                  srun_cap: int = CAL.SRUN_CONCURRENCY_CAP):
         self.profiler = Profiler()
         self.rng = random.Random(seed)
+        # seeded normal-deviate buffer for `noisy`: numpy fills 8k draws at
+        # C speed; random.gauss was ~1.3us per sampled launch on the hot
+        # path
+        self._np_rng = np.random.default_rng(seed)
+        self._normal_buf = None
+        self._normal_pos = 0
         self.srun_cap = srun_cap
         self._srun_used = 0
         self.duration_fn: Optional[Callable] = None
@@ -52,6 +61,12 @@ class Engine(ABC):
     # ------------------------------------------------------------------ time
     def now(self) -> float:
         return self.clock.now()
+
+    @property
+    def events_fired(self) -> int:
+        """Total scheduler events fired so far (0 on wall-clock engines);
+        benchmarks report sim-events/s from this."""
+        return getattr(self.clock, "fired_total", 0)
 
     @abstractmethod
     def schedule(self, delay: float, fn: Callable, *args):
@@ -80,7 +95,13 @@ class Engine(ABC):
     def noisy(self, mean: float, sigma: float = 0.0) -> float:
         if sigma <= 0:
             return mean
-        return mean * math.exp(self.rng.gauss(0.0, sigma))
+        buf = self._normal_buf
+        pos = self._normal_pos
+        if buf is None or pos >= 8192:
+            buf = self._normal_buf = self._np_rng.standard_normal(8192)
+            pos = 0
+        self._normal_pos = pos + 1
+        return mean * math.exp(sigma * buf[pos])
 
     def actual_duration(self, task) -> float:
         if self.duration_fn is not None:
@@ -110,6 +131,11 @@ class SimEngine(Engine):
                  srun_cap: int = CAL.SRUN_CONCURRENCY_CAP):
         super().__init__(seed, srun_cap)
         self.clock = VirtualClock()
+        if type(self) is SimEngine:
+            # bypass the delegation layer on the two hottest engine calls
+            # (subclasses that override now/schedule keep their methods)
+            self.now = self.clock.now
+            self.schedule = self.clock.schedule
 
     def schedule(self, delay: float, fn: Callable, *args):
         return self.clock.schedule(delay, fn, *args)
@@ -118,8 +144,19 @@ class SimEngine(Engine):
               timeout: Optional[float] = None,
               max_events: int = 50_000_000) -> bool:
         # timeout is a wall-clock bound (see Engine.drain): the virtual
-        # clock drains its whole heap, bounded by max_events
-        self.clock.run(max_events=max_events)
+        # clock drains its whole heap, bounded by max_events.
+        # The sim allocates no reference cycles in steady state, so pause
+        # the cyclic GC for the drain — generational collections otherwise
+        # rescan millions of live tasks/trace rows (~25% of wall time on a
+        # 100k-task campaign).
+        was_enabled = gc.isenabled()
+        if was_enabled:
+            gc.disable()
+        try:
+            self.clock.run(max_events=max_events)
+        finally:
+            if was_enabled:
+                gc.enable()
         return predicate() if predicate is not None else True
 
 

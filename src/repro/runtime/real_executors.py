@@ -144,6 +144,7 @@ class RealFunctionExecutor(RealExecutorBase):
     """Dragon-style in-process function executor (thread pool)."""
 
     kind = "dragon"
+    accepts_static = True
 
     def __init__(self, engine, nodes: int = 1, spec=None, workers: int = 4,
                  name: str = "dragon", **_):
@@ -163,6 +164,7 @@ class RealPartitionExecutor(RealExecutorBase):
     submesh) at a time; partitions run concurrently."""
 
     kind = "flux"
+    accepts_static = True
 
     def __init__(self, engine, nodes: int = 1, spec=None,
                  partitions: int = 1, mesh=None, name: str = "flux", **_):
@@ -197,6 +199,7 @@ class SubprocessExecutor(RealExecutorBase):
     retry path); stdout becomes ``task.result``."""
 
     kind = "popen"
+    accepts_static = True
 
     def __init__(self, engine, nodes: int = 1, spec=None, workers: int = 4,
                  timeout: Optional[float] = None, name: str = "popen", **_):

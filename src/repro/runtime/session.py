@@ -177,12 +177,10 @@ class TaskManager:
             raise RuntimeError(f"{self.uid}: no pilots added")
         # least-loaded pilot takes the whole bulk (late binding happens
         # inside the agent; cross-pilot balancing stays coarse-grained);
-        # the lock keeps the load scan consistent with timer-thread
-        # mutations of agent.tasks on the real engine
+        # the lock keeps the load read consistent with timer-thread
+        # mutations of agent counters on the real engine
         with self.session.engine.lock:
-            pilot = min(self._pilots,
-                        key=lambda p: sum(1 for t in p.agent.tasks.values()
-                                          if not t.done))
+            pilot = min(self._pilots, key=lambda p: p.agent.n_unfinished)
             tasks = pilot.agent.submit(descs)
         for t in tasks:
             self.tasks[t.uid] = t
@@ -196,9 +194,9 @@ class TaskManager:
         watched = list(tasks) if tasks is not None else None
 
         def finished() -> bool:
-            pool = (watched if watched is not None
-                    else list(self.tasks.values()))
-            return all(t.done for t in pool)
+            if watched is not None:
+                return all(t.done for t in watched)
+            return all(t.done for t in self.tasks.values())
 
         return self.session.engine.drain(finished, timeout=timeout)
 
@@ -209,10 +207,10 @@ class TaskManager:
         from repro.core.campaign import Campaign
 
         camp = Campaign(self.agent, stages, name=name)
+        agent = self.agent
         with self.session.engine.lock:
             camp.start()
         self.session.engine.drain(
-            lambda: all(t.done for t in self.agent.tasks.values())
-            and camp.complete,
+            lambda: agent.n_unfinished == 0 and camp.complete,
             timeout=timeout)
         return camp

@@ -1,0 +1,184 @@
+"""Golden-equivalence tests: the numpy-vectorized analytics must match the
+seed pure-Python implementations (kept as ``_reference_*``) field-for-field
+on randomized traces, and the columnar profiler must behave exactly like the
+old per-Event list. Plus a slow-marked 100k-task scale smoke test with an
+events-fired budget assertion (the hot-path regression tripwire)."""
+import random
+
+import pytest
+
+from repro.core.analytics import (RunMetrics, _reference_compute_metrics,
+                                  _reference_concurrency_series,
+                                  compute_metrics, concurrency_series)
+from repro.core.events import Event, Profiler
+from repro.core.task import Task, TaskDescription, TaskState
+
+_INT_FIELDS = {"n_tasks", "n_done", "n_failed", "concurrency_peak"}
+
+
+def _random_tasks(rng: random.Random, n: int, integral_times: bool):
+    """Synthesize tasks across all terminal states with adversarial
+    timestamp patterns: duplicates, exact-window gaps, start==end."""
+    tasks = []
+    for i in range(n):
+        d = TaskDescription(
+            cores=rng.randint(1, 64),
+            nodes=rng.randint(1, 4) if rng.random() < 0.15 else 0,
+            duration=rng.uniform(0.0, 50.0))
+        t = Task(d)
+        roll = rng.random()
+        tnow = (float(rng.randint(0, 400)) if integral_times
+                else rng.uniform(0.0, 400.0))
+        t.advance(TaskState.SCHEDULING, tnow)
+        if roll < 0.08:
+            continue                       # never dispatched
+        t.advance(TaskState.QUEUED, tnow)
+        t.advance(TaskState.LAUNCHING, tnow + 0.5)
+        start = tnow + (rng.randint(1, 20) if integral_times
+                        else rng.uniform(0.5, 20.0))
+        t.advance(TaskState.RUNNING, start)
+        span = (rng.randint(0, 30) if integral_times
+                else rng.uniform(0.0, 30.0))
+        if roll < 0.75:
+            t.advance(TaskState.DONE, start + span)
+        elif roll < 0.9:
+            t.advance(TaskState.FAILED, start + span)
+        else:
+            t.advance(TaskState.CANCELED, start + span)
+        tasks.append(t)
+    return tasks
+
+
+def _assert_metrics_equal(got: RunMetrics, ref: RunMetrics):
+    for field, ref_v in ref.__dict__.items():
+        got_v = got.__dict__[field]
+        if field in _INT_FIELDS:
+            assert got_v == ref_v, f"{field}: {got_v} != {ref_v}"
+        elif ref_v == 0.0:
+            assert got_v == 0.0, f"{field}: {got_v} != 0"
+        else:
+            rel = abs(got_v - ref_v) / abs(ref_v)
+            assert rel <= 1e-9, f"{field}: {got_v} vs {ref_v} (rel {rel})"
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("integral_times", [False, True])
+def test_compute_metrics_matches_reference(seed, integral_times):
+    rng = random.Random(seed)
+    tasks = _random_tasks(rng, rng.randint(1, 300), integral_times)
+    for window in (10.0, 7.5, 1.0):
+        got = compute_metrics(tasks, total_cores=4 * 56, window=window)
+        ref = _reference_compute_metrics(tasks, total_cores=4 * 56,
+                                         window=window)
+        _assert_metrics_equal(got, ref)
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("integral_times", [False, True])
+def test_concurrency_series_matches_reference(seed, integral_times):
+    rng = random.Random(100 + seed)
+    tasks = _random_tasks(rng, rng.randint(1, 300), integral_times)
+    for dt in (10.0, 2.5):
+        got = concurrency_series(tasks, dt=dt)
+        ref = _reference_concurrency_series(tasks, dt=dt)
+        assert got == ref
+
+
+def test_analytics_edge_cases():
+    # empty, no-done, and single-task traces
+    for tasks in ([], _random_tasks(random.Random(0), 0, False)):
+        _assert_metrics_equal(compute_metrics(tasks, 224),
+                              _reference_compute_metrics(tasks, 224))
+        assert concurrency_series(tasks) == \
+            _reference_concurrency_series(tasks)
+    t = Task(TaskDescription(cores=1))
+    t.advance(TaskState.SCHEDULING, 0.0)
+    t.advance(TaskState.QUEUED, 0.0)
+    t.advance(TaskState.LAUNCHING, 0.0)
+    t.advance(TaskState.RUNNING, 5.0)
+    t.advance(TaskState.DONE, 5.0)        # zero-length execution
+    _assert_metrics_equal(compute_metrics([t], 224),
+                          _reference_compute_metrics([t], 224))
+    assert concurrency_series([t]) == _reference_concurrency_series([t])
+
+
+def test_compute_metrics_explicit_t_submit0():
+    tasks = _random_tasks(random.Random(7), 50, False)
+    _assert_metrics_equal(
+        compute_metrics(tasks, 224, t_submit0=-3.5),
+        _reference_compute_metrics(tasks, 224, t_submit0=-3.5))
+
+
+# ---------------------------------------------------------------- profiler
+def test_profiler_columnar_roundtrip():
+    p = Profiler()
+    p.record(1.0, "task.0", "state:RUNNING")
+    p.record(2.0, "task.1", "state:DONE", {"k": 1})
+    p.record(3.0, "task.0", "state:DONE")
+    assert len(p) == 3
+    evs = p.events
+    assert evs[0] == Event(1.0, "task.0", "state:RUNNING")
+    assert evs[1] == Event(2.0, "task.1", "state:DONE", {"k": 1})
+    assert [e.entity for e in p.by_name("state:DONE")] == ["task.1", "task.0"]
+    assert p.times("state:DONE") == [2.0, 3.0]
+    assert p.window("state:DONE") == (2.0, 3.0)
+    assert p.window("nope") is None
+    assert p.by_name("nope") == []
+    assert p.counts_by_name() == {"state:RUNNING": 1, "state:DONE": 2}
+
+
+def test_profiler_lazy_index_extends_after_append():
+    p = Profiler()
+    p.record(1.0, "a", "x")
+    assert p.times("x") == [1.0]          # index built
+    p.record(2.0, "a", "x")               # append after index build
+    p.record(3.0, "b", "y")
+    assert p.times("x") == [1.0, 2.0]     # lazily extended, not stale
+    assert len(p.events) == 3
+    assert p.events[2].entity == "b"
+
+
+def test_profiler_record_fast_matches_record():
+    p = Profiler()
+    eid = p.entity_id("task.9")
+    nid = p.name_id("state:RUNNING")
+    p.record_fast(4.0, eid, nid)
+    p.record(5.0, "task.9", "state:RUNNING")
+    evs = p.by_name("state:RUNNING")
+    assert [(e.time, e.entity) for e in evs] == [(4.0, "task.9"),
+                                                (5.0, "task.9")]
+
+
+def test_task_advance_records_columnar_trace():
+    p = Profiler()
+    t = Task(TaskDescription())
+    t.advance(TaskState.SCHEDULING, 1.0, p)
+    t.advance(TaskState.QUEUED, 2.0, p)
+    assert p.times("state:SCHEDULING") == [1.0]
+    assert p.by_name("state:QUEUED")[0].entity == t.uid
+
+
+# ------------------------------------------------------------- scale smoke
+@pytest.mark.slow
+def test_100k_task_scale_smoke():
+    """100k-null-task campaign: completes, all DONE, and the engine stays
+    within the hot-path event budget (~2 scheduler events per task: one
+    launch + one completion, dispatch amortized over the batch)."""
+    from repro.core.agent import Agent, SimEngine
+
+    n = 100_000
+    eng = SimEngine(seed=0)
+    agent = Agent(eng, 64, {"flux": {"partitions": 8}})
+    agent.start()
+    agent.submit([TaskDescription(cores=1, duration=0.0) for _ in range(n)])
+    agent.run_until_complete()
+    assert all(t.state == TaskState.DONE for t in agent.tasks.values())
+    # trace: 5 state events per task plus bounded bootstrap noise
+    assert len(eng.profiler) >= 5 * n
+    assert len(eng.profiler) <= 5 * n + 1000
+    # events-fired budget: launch + completion per task + dispatch ticks
+    # (n/batch) + bootstrap; 2.5x leaves headroom for retries of held
+    # dispatches but catches any O(n) event-count regression
+    assert eng.events_fired <= 2.5 * n + 1000, eng.events_fired
+    m = compute_metrics(list(agent.tasks.values()), agent.total_cores)
+    assert m.n_done == n
