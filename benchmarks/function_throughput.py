@@ -1,0 +1,184 @@
+"""Function-execution + service-task throughput benchmark -> BENCH_services.json.
+
+Characterizes the third and fourth task modalities (repro.services) the way
+the paper characterizes the first two (§4.1, Fig. 5):
+
+* **sim** — 100k (1M with ``--full``) null tasks through the executable path
+  (srun, the paper's baseline: 152 t/s peak) vs the function path (funcpool:
+  in-worker dispatch, structurally capped by the RP task-management ceiling
+  at ~1,600 t/s — the paper's rp+flux+dragon measures 1,547). The acceptance
+  bar is function >= 5x executable dispatch rate.
+* **real** — >= 10k no-op calls through the multiprocessing funcpool on this
+  host, verifying no process is spawned per call (every result carries one
+  of <= `workers` persistent worker PIDs), plus a service demo: replicas +
+  request stream with latency percentiles and per-service utilization.
+
+Usage:
+    PYTHONPATH=src python benchmarks/function_throughput.py            # default
+    PYTHONPATH=src python benchmarks/function_throughput.py --quick    # CI
+    PYTHONPATH=src python benchmarks/function_throughput.py --full     # +1M sim
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+from repro.core.analytics import compute_metrics, service_metrics
+from repro.core.pilot import PilotDescription
+from repro.core.task import TaskDescription
+from repro.runtime import PilotManager, Session, TaskManager
+
+SIM_NODES = 16
+
+
+def _pid_noop(_x):
+    return os.getpid()
+
+
+def sim_run(backends: Dict, kind: str, n_tasks: int, seed: int) -> Dict:
+    t0 = time.time()
+    with Session(mode="sim", seed=seed) as session:
+        pilot = PilotManager(session).submit_pilots(
+            PilotDescription(nodes=SIM_NODES, backends=backends))
+        tmgr = TaskManager(session)
+        tmgr.add_pilots(pilot)
+        tmgr.submit_tasks([TaskDescription(cores=1, kind=kind)
+                           for _ in range(n_tasks)])
+        tmgr.wait_tasks()
+        m = compute_metrics(list(pilot.agent.tasks.values()),
+                            pilot.agent.total_cores)
+        wall = time.time() - t0
+        return {
+            "config": f"{'+'.join(backends)} ({kind})",
+            "n_tasks": n_tasks,
+            "sim_rate_avg": round(m.throughput_avg, 1),
+            "sim_rate_peak": round(m.throughput_peak, 1),
+            "wall_s": round(wall, 2),
+            "harness_tasks_per_s": round(n_tasks / wall),
+            "sim_events": session.engine.events_fired,
+        }
+
+
+def real_funcpool_run(n_calls: int, workers: int, seed: int) -> Dict:
+    t0 = time.time()
+    with Session(mode="real", seed=seed) as session:
+        pilot = PilotManager(session).submit_pilots(
+            PilotDescription(nodes=1,
+                             backends={"funcpool": {"workers": workers}}),
+            # measure the pool, not the modeled RP dispatch stage
+            dispatch_rate=100_000, dispatch_batch=1024)
+        tmgr = TaskManager(session)
+        tmgr.add_pilots(pilot)
+        tasks = tmgr.submit_functions(_pid_noop, range(n_calls))
+        assert tmgr.wait_tasks(timeout=600)
+        wall = time.time() - t0
+        pids = {t.result for t in tasks}
+        n_done = sum(t.state.value == "DONE" for t in tasks)
+        m = compute_metrics(tasks, workers, mode="real")
+        assert n_done == n_calls, f"{n_calls - n_done} calls failed"
+        assert len(pids) <= workers and os.getpid() not in pids, \
+            "per-call process spawn detected"
+        return {
+            "config": f"funcpool x{workers} (real, no-op calls)",
+            "n_calls": n_calls,
+            "workers": workers,
+            "distinct_worker_pids": len(pids),
+            "spawned_process_per_call": False,
+            "wall_s": round(wall, 2),
+            "calls_per_s": round(n_calls / wall),
+            "makespan_s": round(m.makespan, 2),
+        }
+
+
+def real_service_run(n_requests: int, replicas: int, seed: int) -> Dict:
+    with Session(mode="real", seed=seed) as session:
+        pilot = PilotManager(session).submit_pilots(
+            PilotDescription(nodes=1,
+                             backends={"dragon": {"workers": replicas + 2}}))
+        tmgr = TaskManager(session)
+        tmgr.add_pilots(pilot)
+        svc = tmgr.start_service(handler=_pid_noop, replicas=replicas,
+                                 balancer="least-outstanding")
+        svc.submit_requests(range(n_requests))
+        svc.stop()
+        assert tmgr.wait_tasks(timeout=600)
+        m = service_metrics(svc)
+        served = sorted(svc.served_per_replica().values())
+        return {
+            "config": f"service x{replicas} replicas (real)",
+            "n_requests": n_requests,
+            "served_per_replica": served,
+            "latency_p50_ms": round(m.latency_p50 * 1e3, 3),
+            "latency_p99_ms": round(m.latency_p99 * 1e3, 3),
+            "requests_per_s": round(m.throughput),
+            "utilization": round(m.utilization, 4),
+        }
+
+
+def main(argv: List[str] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 100k sim + 10k real calls")
+    ap.add_argument("--full", action="store_true",
+                    help="add a 1M-task sim point and 50k real calls")
+    ap.add_argument("--workers", type=int,
+                    default=min(4, os.cpu_count() or 1))
+    ap.add_argument("--output", default="BENCH_services.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    sim_scales = [100_000] + ([1_000_000] if args.full else [])
+    n_real = 50_000 if args.full else 10_000
+
+    sim_results = []
+    ratios = []
+    for n in sim_scales:
+        ex = sim_run({"srun": {}}, "executable", n, args.seed)
+        fn = sim_run({"funcpool": {}}, "function", n, args.seed)
+        ratio = fn["sim_rate_avg"] / max(ex["sim_rate_avg"], 1e-9)
+        ratios.append(round(ratio, 1))
+        sim_results += [ex, fn]
+        for r in (ex, fn):
+            print(f"[sim ] {r['config']:>24}  n={r['n_tasks']:>9,}  "
+                  f"sim-rate={r['sim_rate_avg']:>7,.1f}/s  "
+                  f"wall={r['wall_s']:.1f}s", flush=True)
+        print(f"[sim ] function/executable dispatch-rate ratio: "
+              f"{ratio:.1f}x (acceptance: >=5x)", flush=True)
+
+    fp = real_funcpool_run(n_real, args.workers, args.seed)
+    print(f"[real] {fp['config']:>24}  n={fp['n_calls']:>9,}  "
+          f"calls/s={fp['calls_per_s']:>6,}  "
+          f"pids={fp['distinct_worker_pids']}", flush=True)
+    svc = real_service_run(2_000, replicas=2, seed=args.seed)
+    print(f"[real] {svc['config']:>24}  n={svc['n_requests']:>9,}  "
+          f"req/s={svc['requests_per_s']:>6,}  "
+          f"p50={svc['latency_p50_ms']}ms p99={svc['latency_p99_ms']}ms",
+          flush=True)
+
+    payload = {
+        "benchmark": "function_throughput",
+        "protocol": ("sim: null-task campaigns through Session/TaskManager, "
+                     "srun executable path vs funcpool in-worker function "
+                     "path, simulated dispatch rates from compute_metrics; "
+                     "real: no-op calls through the multiprocessing "
+                     "funcpool (dispatch_rate raised so the pool, not the "
+                     "modeled RP stage, is measured) and a 2-replica "
+                     "service request stream with latency percentiles"),
+        "sim_nodes": SIM_NODES,
+        "seed": args.seed,
+        "function_vs_executable_ratio": ratios,
+        "sim": sim_results,
+        "real": [fp, svc],
+    }
+    with open(args.output, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.output}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -41,8 +41,25 @@ class RoutingPolicy:
         d = task.description
         if d.backend and d.backend in backends:
             return d.backend
+        if d.kind == "service":
+            # persistent replicas only run on service-capable backends
+            for name in self.order:
+                ex = backends.get(name)
+                if (ex is not None and ex.supports_services
+                        and ex.accepts(task)):
+                    return name
+            for name, ex in backends.items():
+                if ex.supports_services and ex.accepts(task):
+                    return name
+            raise RuntimeError(
+                f"no service-capable backend for task {task.uid}")
         if d.executable and "popen" in backends:
             return "popen"
+        if (d.kind == "function" and "funcpool" in backends
+                and backends["funcpool"].accepts(task)):
+            # in-worker function execution beats per-task launch when a
+            # function pool is configured (Raptor/Dragon function mode)
+            return "funcpool"
         if d.kind == "function" and "dragon" in backends:
             return "dragon"
         if (d.nodes or d.coupling == "tight"):
@@ -139,7 +156,9 @@ class Agent:
                  dispatch_rate: float = CAL.RP_DISPATCH_RATE,
                  dispatch_batch: int = CAL.RP_DISPATCH_BATCH,
                  speculation: bool = False,
-                 speculation_factor: float = 3.0):
+                 speculation_factor: float = 3.0,
+                 speculation_quantile: float = 0.95,
+                 speculation_min_samples: int = 10):
         self.engine = engine
         self.n_nodes = n_nodes
         self.node_spec = node_spec
@@ -148,6 +167,8 @@ class Agent:
         self.dispatch_batch = max(1, dispatch_batch)
         self.speculation = speculation
         self.speculation_factor = speculation_factor
+        self.speculation_quantile = speculation_quantile
+        self.speculation_min_samples = max(1, speculation_min_samples)
 
         self.tasks: Dict[str, Task] = {}
         self._dispatch_q: deque = deque()
@@ -157,9 +178,18 @@ class Agent:
         # predicates are O(1) instead of scanning every task per event
         self._n_terminal = 0
         self.ready_at = 0.0
+        # single-slot legacy hook; use add_done_callback for composable
+        # listeners (campaigns, service readiness watchers, ...)
         self.on_task_done: Optional[Callable[[Task], None]] = None
+        self._done_callbacks: List[Callable[[Task], None]] = []
         self._spec_watch: Dict[str, Any] = {}
         self._spec_clones: Dict[str, Task] = {}
+        # duration-free speculation (ROADMAP: RealEngine stragglers): the
+        # observed RUNNING->DONE durations feed a trace quantile that stands
+        # in for the missing description.duration as the deadline base
+        self._obs_durations: List[float] = []
+        self._spec_pending: Dict[str, Task] = {}   # awaiting a quantile
+        self._quantile_memo: Optional[tuple] = None  # (n_obs, deadline)
         self._observe_completion = getattr(self.policy, "observe_completion",
                                            None)
 
@@ -291,9 +321,18 @@ class Agent:
             backends[name].submit_many(bulk)
             if speculation:
                 for task in bulk:
-                    if (task.description.duration > 0
-                            and task.speculative_of is None):  # no chains
+                    if (task.speculative_of is not None       # no chains
+                            or task.description.kind == "service"):
+                        continue
+                    if task.description.duration > 0:
                         self._arm_speculation(task)
+                    else:
+                        # duration-free: deadline from the trace quantile
+                        deadline = self._quantile_deadline()
+                        if deadline is not None:
+                            self._arm_speculation(task, deadline)
+                        else:
+                            self._spec_pending[task.uid] = task
         if not held:
             self._pump_dispatch()
 
@@ -303,7 +342,23 @@ class Agent:
             self._observe_completion(task.backend, self.engine.now())
         if self._spec_clones or task.speculative_of:
             self._resolve_speculation(task)
+        if self.speculation:
+            self._observe_duration(task)
         self._finish(task)
+
+    def _observe_duration(self, task: Task):
+        """Feed the speculation quantile; once enough samples exist, arm the
+        duration-free tasks that were parked waiting for one."""
+        ts = task.timestamps
+        if task.state is TaskState.DONE and "RUNNING" in ts:
+            self._obs_durations.append(ts["DONE"] - ts["RUNNING"])
+        if (self._spec_pending
+                and len(self._obs_durations) >= self.speculation_min_samples):
+            deadline = self._quantile_deadline()
+            pending, self._spec_pending = self._spec_pending, {}
+            for t in pending.values():
+                if not t.done:
+                    self._arm_speculation(t, deadline)
 
     def _resolve_speculation(self, task: Task):
         clone = self._spec_clones.pop(task.uid, None)
@@ -340,12 +395,40 @@ class Agent:
 
     def _finish(self, task: Task):
         self._n_terminal += 1
+        if self._spec_pending:
+            self._spec_pending.pop(task.uid, None)
+        for cb in self._done_callbacks:
+            cb(task)
         if self.on_task_done:
             self.on_task_done(task)
 
+    def add_done_callback(self, cb: Callable[[Task], None]):
+        """Register a terminal-state listener; all registered callbacks run
+        (in registration order) plus the legacy ``on_task_done`` slot, so
+        campaigns and service watchers compose instead of clobbering."""
+        self._done_callbacks.append(cb)
+
     # ----------------------------------------------------------- speculation
-    def _arm_speculation(self, task: Task):
-        deadline = task.description.duration * self.speculation_factor
+    def _quantile_deadline(self) -> Optional[float]:
+        """Speculation deadline for duration-free tasks: the configured
+        quantile of observed task durations times the speculation factor
+        (None until enough completions have been traced)."""
+        obs = self._obs_durations
+        n = len(obs)
+        if n < self.speculation_min_samples:
+            return None
+        if self._quantile_memo is not None and self._quantile_memo[0] == n:
+            return self._quantile_memo[1]
+        window = sorted(obs[-1024:])
+        q = window[min(len(window) - 1,
+                       int(self.speculation_quantile * len(window)))]
+        deadline = max(q, 1e-3) * self.speculation_factor
+        self._quantile_memo = (n, deadline)
+        return deadline
+
+    def _arm_speculation(self, task: Task, deadline: Optional[float] = None):
+        if deadline is None:
+            deadline = task.description.duration * self.speculation_factor
 
         def watchdog():
             if task.done or task.uid in self._spec_clones:

@@ -42,8 +42,18 @@ class RunMetrics:
 
 def compute_metrics(tasks: Sequence[Task], total_cores: int,
                     window: float = 10.0,
-                    t_submit0: Optional[float] = None) -> RunMetrics:
+                    t_submit0: Optional[float] = None,
+                    mode: str = "sim") -> RunMetrics:
+    """``mode="sim"`` (default, golden-pinned) interprets timestamps as
+    virtual times and charges each task its *simulated* resource footprint
+    (description cores/nodes). ``mode="real"`` interprets them as wall-clock
+    seconds from a real run on this host, where the description footprint is
+    fictional: each task occupied one local worker, so ``total_cores`` should
+    be the worker count, busy-time is charged one worker per task, and the
+    makespan extends to the last *terminal* event (failures included)."""
+    real = mode == "real"
     n_failed = 0
+    term_end = 0.0
     starts_raw: List[float] = []
     ends_raw: List[float] = []
     cores_raw: List[int] = []
@@ -53,11 +63,18 @@ def compute_metrics(tasks: Sequence[Task], total_cores: int,
             ts = t.timestamps
             starts_raw.append(ts.get("RUNNING", 0.0))
             ends_raw.append(ts["DONE"])
-            d = t.description
-            cores_raw.append(d.nodes * CORES_PER_NODE if d.nodes
-                             else max(1, d.cores))
+            if real:
+                cores_raw.append(1)
+            else:
+                d = t.description
+                cores_raw.append(d.nodes * CORES_PER_NODE if d.nodes
+                                 else max(1, d.cores))
         elif state is TaskState.FAILED:
             n_failed += 1
+            if real:
+                term_end = max(term_end, t.timestamps.get("FAILED", 0.0))
+        elif real and state in (TaskState.STOPPED, TaskState.CANCELED):
+            term_end = max(term_end, t.timestamps.get(state.value, 0.0))
     n_done = len(starts_raw)
     if not n_done:
         return RunMetrics(len(tasks), 0, n_failed, 0.0, 0.0, 0.0, 0.0,
@@ -72,7 +89,7 @@ def compute_metrics(tasks: Sequence[Task], total_cores: int,
     start_min = float(starts[0])
     start_max = float(starts[-1])
     end_max = float(ends.max())
-    makespan = end_max - t0
+    makespan = (max(end_max, term_end) if real else end_max) - t0
 
     # throughput over the launch window
     launch_span = start_max - start_min
@@ -140,6 +157,57 @@ def concurrency_series(tasks: Sequence[Task], dt: float = 10.0
         out = []
     out.append((t_last, 0))
     return out
+
+
+# --------------------------------------------------------------------------
+# Service-task analytics (repro.services): request-latency percentiles and
+# per-service utilization over the columnar request log.
+# --------------------------------------------------------------------------
+
+@dataclass
+class ServiceMetrics:
+    n_requests: int
+    n_completed: int
+    n_failed: int                  # handler raised (real mode)
+    latency_mean: float            # submit -> completion, queueing included
+    latency_p50: float
+    latency_p90: float
+    latency_p99: float
+    service_time_mean: float       # start -> completion (handler only)
+    throughput: float              # completed requests / serving window
+    utilization: float             # busy replica-seconds / (replicas x window)
+    window: float                  # first request start -> last completion
+
+    def as_dict(self) -> Dict[str, float]:
+        return self.__dict__.copy()
+
+
+def service_metrics(service) -> ServiceMetrics:
+    """Request-level metrics for one :class:`repro.services.Service`, from
+    its columnar request log (vectorized; million-request streams are fine)."""
+    log = service.request_log()
+    submit = np.asarray(log["submit"])
+    start = np.asarray(log["start"])
+    end = np.asarray(log["end"])
+    ok = np.frombuffer(bytes(log["ok"]), dtype=np.uint8)
+    n = len(submit)
+    done = end >= 0.0                     # completed (ok or handler-failed)
+    n_done = int(done.sum())
+    n_failed = int((ok == 2).sum())
+    if not n_done:
+        return ServiceMetrics(n, 0, n_failed, 0.0, 0.0, 0.0, 0.0, 0.0,
+                              0.0, 0.0, 0.0)
+    lat = end[done] - submit[done]
+    svc_t = end[done] - start[done]
+    p50, p90, p99 = np.percentile(lat, (50.0, 90.0, 99.0))
+    window = float(end[done].max() - start[done].min())
+    busy = float(svc_t.sum())
+    replicas = max(1, service.n_replicas)
+    util = busy / (replicas * window) if window > 0 else 0.0
+    thr = n_done / window if window > 0 else float(n_done)
+    return ServiceMetrics(n, n_done, n_failed, float(lat.mean()),
+                          float(p50), float(p90), float(p99),
+                          float(svc_t.mean()), thr, min(1.0, util), window)
 
 
 # --------------------------------------------------------------------------

@@ -49,7 +49,10 @@ class Campaign:
         self._launched: set = set()
         self._done_stages: set = set()
         self._started = False
-        agent.on_task_done = self._task_done
+        # register (not assign): previously this clobbered any installed
+        # on_task_done, so campaigns didn't compose with other watchers
+        # (service readiness, user callbacks) on the same agent
+        agent.add_done_callback(self._task_done)
 
     # ------------------------------------------------------------------ run
     def start(self):

@@ -29,6 +29,9 @@ class BaseExecutor(ABC):
     # dynamic accepts() (queue state, other fields) stays correct by
     # default and pays a per-task route() instead.
     accepts_static: bool = False
+    # Can this backend host persistent service tasks (kind="service")?
+    # The routing policy only considers service-capable backends for them.
+    supports_services: bool = False
 
     def __init__(self, name: str):
         self.name = name
@@ -57,7 +60,22 @@ class BaseExecutor(ABC):
     def cancel(self, task: Task) -> None: ...
 
     def accepts(self, task: Task) -> bool:
+        # service replicas only fit service-capable backends; enforced here
+        # (not just in the routing policy's special case) so dynamic
+        # policies building eligibility from accepts() respect it too
+        if task.description.kind == "service":
+            return self.supports_services
         return True
+
+    def stop_service(self, task: Task) -> None:
+        """Finalize a drained service replica: release its allocation and
+        complete it (DRAINING -> STOPPED). Called by the owning Service once
+        no in-flight requests remain. Default: delegate to whichever launch
+        server hosts the replica."""
+        for s in self._servers():
+            if task.uid in s.running:
+                s.finish_service(task)
+                return
 
     def shutdown(self) -> None:
         """Release backend resources (thread pools, subprocesses)."""
@@ -225,11 +243,47 @@ class SimLaunchServer:
             self._stall_head = None        # pool changed: rescan
             self.pump()
             return
+        if task.description.kind == "service":
+            # persistent replica: provision, then signal readiness; it holds
+            # its allocation (no completion event) until finish_service
+            task.advance(TaskState.PROVISIONING, engine.now(),
+                         engine.profiler)
+            self.running[task.uid] = task
+            svc = task.description.service
+            startup = svc.startup if svc is not None else 0.0
+            engine.schedule(max(startup, 1e-6), self._service_ready, task)
+            self.pump()
+            return
         task.advance(TaskState.RUNNING, engine.now(), engine.profiler)
         self.running[task.uid] = task
         dur = engine.actual_duration(task)
         ev = engine.schedule(dur, self._complete_cb, task)
         self._completion_events[task.uid] = ev
+        self.pump()
+
+    def _service_ready(self, task: Task):
+        if self.dead or task.uid not in self.running:
+            return                         # killed or canceled mid-boot
+        if task.state is not TaskState.PROVISIONING:
+            return
+        engine = self.engine
+        task.advance(TaskState.READY, engine.now(), engine.profiler)
+        svc = task.description.service
+        if svc is not None:
+            svc._replica_ready(task)
+
+    def finish_service(self, task: Task):
+        """Complete a drained replica: DRAINING -> STOPPED, release its
+        allocation, and hand lifecycle control back through on_complete."""
+        if self.running.pop(task.uid, None) is None:
+            return
+        self._release(task)
+        self._stall_head = None            # pool changed: rescan
+        engine = self.engine
+        if not task.done:
+            task.advance(TaskState.STOPPED, engine.now(), engine.profiler)
+            if self.on_complete:
+                self.on_complete(task)
         self.pump()
 
     def _complete(self, task: Task):

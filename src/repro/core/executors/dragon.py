@@ -23,6 +23,7 @@ from repro.runtime.registry import register_executor
 class SimDragonExecutor(BaseExecutor):
     kind = "dragon"
     accepts_static = True
+    supports_services = True     # single-node replicas (no co-scheduling)
 
     def __init__(self, engine, n_nodes: int, n_partitions: int = 1,
                  spec: NodeSpec = NodeSpec(cores=CAL.CORES_PER_NODE,

@@ -23,6 +23,7 @@ from repro.runtime.registry import register_executor
 class SimFluxExecutor(BaseExecutor):
     kind = "flux"
     accepts_static = True
+    supports_services = True     # replicas hold a partition allocation
 
     def __init__(self, engine, n_nodes: int, n_partitions: int = 1,
                  spec: NodeSpec = NodeSpec(cores=CAL.CORES_PER_NODE,

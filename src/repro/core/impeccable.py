@@ -29,7 +29,14 @@ def _dummy(duration: float = CAL.DUMMY_TASK_S, **kw) -> TaskDescription:
 def make_impeccable_stages(n_nodes: int, iterations: int = 3,
                            duration: float = CAL.DUMMY_TASK_S,
                            scoring_chain: int = 3,
-                           esmacs_chain: int = 6) -> List[Stage]:
+                           esmacs_chain: int = 6,
+                           service_inference: bool = False) -> List[Stage]:
+    """``service_inference=True`` runs each inference stage the way the
+    production campaign does (§2): a persistent service — N single-node
+    replicas provisioned once — fed a request stream, instead of launching
+    one batch task per inference. The stage's tasks are the service
+    replicas; it completes when the stream is served and the replicas reach
+    STOPPED, so downstream dependencies are unchanged."""
     f = max(1.0, n_nodes / 128.0)
     stages: List[Stage] = []
 
@@ -68,9 +75,24 @@ def make_impeccable_stages(n_nodes: int, iterations: int = 3,
             return [_dummy(duration, nodes=1, kind="function",
                            workflow="inference") for _ in range(infer)]
 
-        stages.append(Stage(f"inference.{it}", mk_infer,
-                            depends_on=[f"sst_train.{it}"],
-                            workflow="inference"))
+        def mk_infer_service(ctx: StageContext):
+            from repro.services import Service
+            _, infer = counts(ctx.free_cores)
+            # replicas amortize model load (DRAGON-like startup) over the
+            # whole request stream; each request is one inference batch
+            svc = Service(ctx.agent, replicas=max(2, int(2 * f)), nodes=1,
+                          startup=CAL.DRAGON_STARTUP_S, rate=1.0 / duration,
+                          balancer="least-outstanding",
+                          workflow="inference", name="inference")
+            for _ in range(infer):
+                svc.request()                      # buffered until READY
+            svc.stop()                             # drain once served
+            return svc.descriptions()
+
+        stages.append(Stage(
+            f"inference.{it}",
+            mk_infer_service if service_inference else mk_infer,
+            depends_on=[f"sst_train.{it}"], workflow="inference"))
 
         # physics scoring: chain of MPI segments (Dock-Min-MMPBSA)
         for seg in range(scoring_chain):
@@ -125,7 +147,8 @@ def backend_config(backend: str, n_nodes: int, partitions: int = 0) -> dict:
 
 
 def run_impeccable(backend: str, n_nodes: int, iterations: int = 3,
-                   seed: int = 0, partitions: int = 0):
+                   seed: int = 0, partitions: int = 0,
+                   service_inference: bool = False):
     """Run the campaign on one backend config through the Session facade;
     returns (agent, campaign)."""
     from repro.core.pilot import PilotDescription
@@ -139,6 +162,8 @@ def run_impeccable(backend: str, n_nodes: int, iterations: int = 3,
             backends=backend_config(backend, n_nodes, partitions)))
         tmgr.add_pilots(pilot)
         campaign = tmgr.run_campaign(
-            make_impeccable_stages(n_nodes, iterations), name="impeccable")
+            make_impeccable_stages(n_nodes, iterations,
+                                   service_inference=service_inference),
+            name="impeccable")
         assert campaign.complete, "campaign did not finish"
         return pilot.agent, campaign

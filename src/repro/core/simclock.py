@@ -104,6 +104,11 @@ class RealClock:
     def now(self) -> float:
         return time.monotonic() - self._t0
 
+    def from_monotonic(self, t: float) -> float:
+        """Map a raw ``time.monotonic()`` stamp (CLOCK_MONOTONIC is
+        system-wide, so worker processes share it) onto this clock."""
+        return t - self._t0
+
     def schedule(self, delay: float, fn: Callable, *args):
         t = threading.Timer(max(0.0, delay), fn, args=args)
         t.daemon = True

@@ -24,9 +24,18 @@ class TaskState(str, Enum):
     DONE = "DONE"
     FAILED = "FAILED"
     CANCELED = "CANCELED"
+    # persistent service-task lifecycle (RHAPSODY/RP service tasks): after
+    # LAUNCHING the replica provisions (loads its model / boots its server),
+    # signals readiness, serves a request stream, then drains and stops
+    PROVISIONING = "PROVISIONING"  # service boot on its allocation
+    READY = "READY"                # accepting requests, none served yet
+    SERVING = "SERVING"            # has served at least one request
+    DRAINING = "DRAINING"          # no new requests; finishing in-flight ones
+    STOPPED = "STOPPED"            # service terminal state
 
 
-TERMINAL = {TaskState.DONE, TaskState.FAILED, TaskState.CANCELED}
+TERMINAL = {TaskState.DONE, TaskState.FAILED, TaskState.CANCELED,
+            TaskState.STOPPED}
 
 _LEGAL: Dict[TaskState, set] = {
     TaskState.NEW: {TaskState.SCHEDULING, TaskState.CANCELED},
@@ -34,17 +43,27 @@ _LEGAL: Dict[TaskState, set] = {
                            TaskState.CANCELED},
     TaskState.QUEUED: {TaskState.LAUNCHING, TaskState.SCHEDULING,
                        TaskState.FAILED, TaskState.CANCELED},
-    TaskState.LAUNCHING: {TaskState.RUNNING, TaskState.FAILED,
-                          TaskState.CANCELED},
+    TaskState.LAUNCHING: {TaskState.RUNNING, TaskState.PROVISIONING,
+                          TaskState.FAILED, TaskState.CANCELED},
     TaskState.RUNNING: {TaskState.DONE, TaskState.FAILED, TaskState.CANCELED},
+    TaskState.PROVISIONING: {TaskState.READY, TaskState.FAILED,
+                             TaskState.CANCELED},
+    TaskState.READY: {TaskState.SERVING, TaskState.DRAINING,
+                      TaskState.FAILED, TaskState.CANCELED},
+    TaskState.SERVING: {TaskState.DRAINING, TaskState.FAILED,
+                        TaskState.CANCELED},
+    TaskState.DRAINING: {TaskState.STOPPED, TaskState.FAILED,
+                         TaskState.CANCELED},
     TaskState.DONE: set(),
     TaskState.FAILED: {TaskState.SCHEDULING},      # retry re-enters scheduling
     TaskState.CANCELED: set(),
+    TaskState.STOPPED: set(),
 }
 
 # first-transition timestamp wins for stable metrics on retries, except
-# RUNNING/LAUNCHING/terminal which reflect the final attempt
-_TS_OVERWRITE = TERMINAL | {TaskState.RUNNING, TaskState.LAUNCHING}
+# RUNNING/LAUNCHING/PROVISIONING/terminal which reflect the final attempt
+_TS_OVERWRITE = TERMINAL | {TaskState.RUNNING, TaskState.LAUNCHING,
+                            TaskState.PROVISIONING}
 _STATE_KEY = {s: s.value for s in TaskState}
 _STATE_EVENT = {s: f"state:{s.value}" for s in TaskState}
 
@@ -58,7 +77,7 @@ def new_uid(prefix: str = "task") -> str:
 @dataclass(init=False)
 class TaskDescription:
     uid: str = ""
-    kind: str = "executable"            # executable | function
+    kind: str = "executable"            # executable | function | service
     cores: int = 1
     gpus: int = 0
     nodes: int = 0                      # >0: whole-node co-scheduling (MPI-like)
@@ -73,6 +92,9 @@ class TaskDescription:
     stage: str = ""
     workflow: str = ""
     max_retries: int = 0
+    service: Optional[Any] = None       # owning repro.services.Service for
+                                        # kind="service" replicas (provides
+                                        # startup/rate/handler + request queues)
 
     # hand-written __init__ (same signature/defaults as the generated one,
     # __post_init__ folded in): descriptions are created once per task, so
@@ -83,7 +105,8 @@ class TaskDescription:
                  args: Tuple = (), kwargs: Optional[Dict[str, Any]] = None,
                  executable: str = "", arguments: Tuple = (),
                  coupling: str = "loose", backend: Optional[str] = None,
-                 stage: str = "", workflow: str = "", max_retries: int = 0):
+                 stage: str = "", workflow: str = "", max_retries: int = 0,
+                 service: Optional[Any] = None):
         self.uid = uid or new_uid()
         self.kind = kind
         self.cores = cores
@@ -100,6 +123,7 @@ class TaskDescription:
         self.stage = stage
         self.workflow = workflow
         self.max_retries = max_retries
+        self.service = service
 
 
 class InvalidTransition(RuntimeError):

@@ -13,17 +13,21 @@ backends plug in with ``@register_executor`` and no agent edits.
 from repro.runtime.engine import Engine, RealEngine, SimEngine
 from repro.runtime.registry import (available_executors, create_executor,
                                     register_executor, unregister_executor)
-from repro.runtime.real_executors import (RealExecutorBase,
+from repro.runtime.real_executors import (FuncPoolExecutor,
+                                          RealExecutorBase,
                                           RealFunctionExecutor,
                                           RealPartitionExecutor,
                                           SubprocessExecutor)
 from repro.runtime.session import PilotManager, Session, TaskManager
+from repro.services import (LeastOutstandingBalancer, RoundRobinBalancer,
+                            Service)
 
 __all__ = [
     "Engine", "SimEngine", "RealEngine",
     "register_executor", "unregister_executor", "create_executor",
     "available_executors",
     "RealExecutorBase", "RealFunctionExecutor", "RealPartitionExecutor",
-    "SubprocessExecutor",
+    "SubprocessExecutor", "FuncPoolExecutor",
     "Session", "PilotManager", "TaskManager",
+    "Service", "RoundRobinBalancer", "LeastOutstandingBalancer",
 ]

@@ -11,7 +11,8 @@ New runtime backends plug into the agent without editing ``agent.py``:
 ``Agent._build_backends`` resolves ``{"mybackend": {...options}}`` through
 :func:`create_executor`, keyed on the engine's ``mode`` ("sim" / "real");
 a factory registered under ``mode="any"`` serves both. Built-in backends
-(sim: flux/dragon/srun; real: flux/dragon/popen) self-register on import.
+(sim: flux/dragon/srun/funcpool; real: flux/dragon/popen/funcpool)
+self-register on import.
 """
 from __future__ import annotations
 
@@ -45,6 +46,7 @@ def _ensure_builtins():
     # importing the modules triggers their @register_executor decorators
     import repro.core.executors.dragon    # noqa: F401
     import repro.core.executors.flux      # noqa: F401
+    import repro.core.executors.funcpool  # noqa: F401
     import repro.core.executors.srun      # noqa: F401
     import repro.runtime.real_executors   # noqa: F401
 

@@ -186,6 +186,39 @@ class TaskManager:
             self.tasks[t.uid] = t
         return tasks[0] if single else tasks
 
+    # ------------------------------------------------------------- services
+    def start_service(self, handler=None, *, replicas: int = 2,
+                      cores: int = 1, gpus: int = 0, nodes: int = 0,
+                      startup: float = 0.0, rate: float = 0.0,
+                      balancer="round-robin", backend: Optional[str] = None,
+                      name: str = "", workflow: str = ""):
+        """Provision ``replicas`` persistent service tasks on the bound
+        pilot and return the :class:`repro.services.Service` handle. The
+        replica tasks flow through the normal dispatch pipeline and are
+        tracked by this manager (``wait_tasks`` covers them); route requests
+        with ``service.request(payload)`` / ``submit_requests`` — they are
+        buffered until the replicas are READY — and finish with
+        ``service.stop()``."""
+        from repro.services import Service
+
+        svc = Service(self.agent, handler=handler, replicas=replicas,
+                      cores=cores, gpus=gpus, nodes=nodes, startup=startup,
+                      rate=rate, balancer=balancer, backend=backend,
+                      name=name, workflow=workflow)
+        self.submit_tasks(svc.descriptions())
+        return svc
+
+    def submit_functions(self, fn, argslist, **td_kw) -> List[Task]:
+        """Submit one function task per element of ``argslist`` (each element
+        becomes the positional args; non-tuples are wrapped). With a
+        ``funcpool`` backend configured these execute inside persistent
+        workers — the paper's high-throughput function path."""
+        descs = [TaskDescription(kind="function", fn=fn,
+                                 args=a if isinstance(a, tuple) else (a,),
+                                 **td_kw)
+                 for a in argslist]
+        return self.submit_tasks(descs)
+
     def wait_tasks(self, tasks: Optional[Sequence[Task]] = None,
                    timeout: Optional[float] = None) -> bool:
         """Block until the given tasks (default: all submitted through this

@@ -1,0 +1,436 @@
+"""Persistent service tasks: N replicas + a routed request stream.
+
+The paper's IMPECCABLE inference runs as long-lived *services* rather than
+batch jobs, and RHAPSODY (arXiv:2512.20795) names service tasks as the task
+modality that makes hybrid AI-HPC campaigns scale: provision once, then
+amortize the launch cost over a stream of requests. A :class:`Service` owns
+``replicas`` tasks with ``kind="service"`` that run the persistent lifecycle
+added to the task state machine::
+
+    NEW -> SCHEDULING -> QUEUED -> LAUNCHING -> PROVISIONING -> READY
+                                                  -> SERVING -> DRAINING -> STOPPED
+
+Replica tasks flow through the normal agent dispatch pipeline (routing,
+placement, resource allocation); the hosting executor advances them to
+PROVISIONING/READY and calls back into the service, which then routes
+requests across ready replicas with a pluggable load balancer.
+
+Engine duality, same as everywhere else in the substrate:
+
+* **sim** — each replica is a single server with service time
+  ``noisy(1/rate)`` per request (calibrated per-replica service-rate model);
+  request completions are discrete events on the engine clock.
+* **real** — each replica occupies one executor worker thread for its whole
+  lifetime and blocks on a per-replica ``queue.Queue``; ``handler(payload)``
+  executes in that persistent worker (no per-request dispatch through the
+  task pipeline).
+
+All service entry points serialize on ``engine.lock``, so the same Service
+code drives both engines and composes with campaigns (replica STOPPED is a
+terminal task state — stages of service tasks complete like any other).
+"""
+from __future__ import annotations
+
+import queue as _thread_queue
+from array import array
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.task import Task, TaskDescription, TaskState, new_uid
+
+# sentinel handed to a real replica's request queue to end its serve loop
+SVC_STOP = object()
+
+# request status codes for the columnar ok-flags
+_PENDING, _OK, _FAILED = 0, 1, 2
+
+
+class RoundRobinBalancer:
+    """Cycle through ready replicas in order."""
+
+    def __init__(self):
+        self._i = 0
+
+    def pick(self, replicas: List["Replica"]) -> "Replica":
+        r = replicas[self._i % len(replicas)]
+        self._i += 1
+        return r
+
+
+class LeastOutstandingBalancer:
+    """Route to the ready replica with the fewest in-flight requests."""
+
+    def pick(self, replicas: List["Replica"]) -> "Replica":
+        return min(replicas, key=lambda r: r.outstanding)
+
+
+_BALANCERS = {"round-robin": RoundRobinBalancer,
+              "least-outstanding": LeastOutstandingBalancer}
+
+
+def make_balancer(spec) -> Any:
+    """Resolve a balancer name ("round-robin" | "least-outstanding") or pass
+    an instance through (anything with ``pick(replicas)``)."""
+    if isinstance(spec, str):
+        try:
+            return _BALANCERS[spec]()
+        except KeyError:
+            raise KeyError(f"unknown balancer {spec!r} "
+                           f"(available: {sorted(_BALANCERS)})") from None
+    return spec
+
+
+class Replica:
+    """Per-replica runtime state: the hosting Task, its in-flight count, and
+    its request queue (deque of rids in sim, thread Queue in real)."""
+
+    __slots__ = ("task", "outstanding", "queue", "busy", "served",
+                 "stop_sent")
+
+    def __init__(self, task: Task, real: bool):
+        self.task = task
+        self.outstanding = 0           # dispatched, not yet completed
+        self.queue = _thread_queue.Queue() if real else deque()
+        self.busy = False              # sim: a request is in service
+        self.served = 0
+        self.stop_sent = False         # real: drain sentinel enqueued
+
+
+class Service:
+    """N persistent replicas + request routing; see module docstring.
+
+    Parameters
+    ----------
+    agent : the pilot agent hosting the replicas (engine + backends).
+    handler : real-mode request handler, called as ``handler(payload)`` in
+        the replica's persistent worker; ``None`` echoes the payload.
+    replicas : number of service tasks to provision.
+    cores/gpus/nodes : per-replica resource footprint (normal routing rules).
+    startup : sim-mode provisioning time (s) per replica.
+    rate : sim-mode per-replica request service rate (req/s); a request may
+        override with an explicit ``duration``.
+    balancer : "round-robin" | "least-outstanding" | instance with ``pick``.
+    """
+
+    def __init__(self, agent, handler: Optional[Callable] = None,
+                 replicas: int = 2, cores: int = 1, gpus: int = 0,
+                 nodes: int = 0, startup: float = 0.0, rate: float = 0.0,
+                 rate_sigma: float = 0.15, balancer="round-robin",
+                 backend: Optional[str] = None, name: str = "",
+                 workflow: str = ""):
+        assert replicas >= 1
+        self.agent = agent
+        self.engine = agent.engine
+        self.handler = handler
+        self.n_replicas = replicas
+        self.startup = startup
+        self.rate = rate
+        self.rate_sigma = rate_sigma
+        self.balancer = make_balancer(balancer)
+        self.name = name or new_uid("service")
+        self.error: Optional[str] = None
+        self._real = self.engine.mode == "real"
+        self._descriptions: Optional[List[TaskDescription]] = None
+        self._desc_kw = dict(cores=cores, gpus=gpus, nodes=nodes,
+                             backend=backend, workflow=workflow)
+
+        self._replicas: Dict[str, Replica] = {}      # uid -> Replica
+        self._ready: List[Replica] = []              # live READY/SERVING
+        self._n_terminal = 0                         # replica tasks finished
+        self._buffer: deque = deque()                # rids awaiting readiness
+        self._flushed = False
+        self._stopping = False
+        self._ready_cbs: List[Callable[[], None]] = []
+
+        # columnar per-request log (events.py style): parallel arrays indexed
+        # by rid; starts/ends are assigned out of order, so placeholders are
+        # appended at submission and overwritten in place
+        self._submit_ts = array("d")
+        self._start_ts = array("d")
+        self._end_ts = array("d")
+        self._ok = bytearray()
+        self._payloads: List[Any] = []
+        self._durations: List[Optional[float]] = []
+        self.results: List[Any] = []
+        self._n_done = 0
+
+        agent.add_done_callback(self._replica_terminal)
+
+    # ------------------------------------------------------------- replicas
+    def descriptions(self) -> List[TaskDescription]:
+        """The replica TaskDescriptions (memoized) — submit these through the
+        agent/TaskManager, or return them from a campaign stage."""
+        if self._descriptions is None:
+            self._descriptions = [
+                TaskDescription(kind="service", service=self,
+                                uid=new_uid(f"{self.name}.replica"),
+                                **self._desc_kw)
+                for _ in range(self.n_replicas)]
+        return self._descriptions
+
+    def submit(self) -> List[Task]:
+        """Convenience: submit the replica tasks through the agent."""
+        return self.agent.submit(self.descriptions())
+
+    # executor callbacks ------------------------------------------------
+    def _attach_replica(self, task: Task) -> Replica:
+        """Idempotently create the Replica record for a provisioning task
+        (real executors need the request queue before READY)."""
+        r = self._replicas.get(task.uid)
+        if r is None:
+            r = self._replicas[task.uid] = Replica(task, self._real)
+        return r
+
+    def _replica_ready(self, task: Task):
+        """Hosting executor reports the replica READY (under engine.lock)."""
+        r = self._attach_replica(task)
+        self._ready.append(r)
+        self._maybe_flush()
+        if self._stopping:
+            self._maybe_stop_all()
+        if self.all_ready:
+            for cb in self._ready_cbs:
+                cb()
+            self._ready_cbs.clear()
+
+    def _replica_terminal(self, task: Task):
+        """Agent done-callback: drop dead replicas from the rotation. The
+        back-reference check keeps this O(1) on the agent's completion hot
+        path (the callback sees every task the agent finishes)."""
+        if task.description.service is not self:
+            return
+        self._n_terminal += 1
+        r = self._replicas.get(task.uid)
+        if r is not None and r in self._ready:
+            self._ready.remove(r)
+        if (task.state in (TaskState.FAILED, TaskState.CANCELED)
+                and self.error is None):
+            self.error = f"replica {task.uid}: {task.state.value}"
+        if r is not None and task.state is not TaskState.STOPPED:
+            self._fail_replica_requests(r, task)
+        self._maybe_flush()                 # fewer live replicas to wait for
+        if self._stopping:
+            # a replica death can leave idle survivors undrained (their
+            # earlier stop check was skipped while requests sat buffered)
+            self._maybe_stop_all()
+
+    # ------------------------------------------------------------- requests
+    def request(self, payload: Any = None,
+                duration: Optional[float] = None) -> int:
+        """Enqueue one request; returns its rid. Buffered until replicas are
+        ready. ``duration`` overrides the sim service time for this request."""
+        with self.engine.lock:
+            if self._stopping:
+                raise RuntimeError(f"{self.name}: stopped — no new requests")
+            rid = len(self._submit_ts)
+            self._submit_ts.append(self.engine.now())
+            self._start_ts.append(-1.0)
+            self._end_ts.append(-1.0)
+            self._ok.append(_PENDING)
+            self._payloads.append(payload)
+            self._durations.append(duration)
+            self.results.append(None)
+            if self._flushed and self._ready:
+                self._dispatch(rid)
+            else:
+                self._buffer.append(rid)
+        return rid
+
+    def submit_requests(self, payloads) -> List[int]:
+        return [self.request(p) for p in payloads]
+
+    def _maybe_flush(self):
+        """Release buffered requests once every still-live replica is ready
+        (keeps the balancer's spread deterministic for buffered bursts)."""
+        expected = self.n_replicas - self._n_terminal
+        if self._ready and len(self._ready) >= expected:
+            self._flushed = True
+        if self._flushed and self._ready:
+            while self._buffer:
+                self._dispatch(self._buffer.popleft())
+
+    def _dispatch(self, rid: int):
+        r = self.balancer.pick(self._ready)
+        r.outstanding += 1
+        task = r.task
+        if task.state is TaskState.READY:
+            task.advance(TaskState.SERVING, self.engine.now(),
+                         self.engine.profiler)
+        if self._real:
+            r.queue.put((rid, self._payloads[rid]))
+        else:
+            r.queue.append(rid)
+            if not r.busy:
+                self._sim_start(r)
+
+    # sim request execution --------------------------------------------
+    def _sim_start(self, r: Replica):
+        rid = r.queue.popleft()
+        r.busy = True
+        self._start_ts[rid] = self.engine.now()
+        dur = self._durations[rid]
+        if dur is None:
+            dur = (self.engine.noisy(1.0 / self.rate, self.rate_sigma)
+                   if self.rate > 0 else 1e-6)
+        self.engine.schedule(max(dur, 1e-6), self._sim_done, r, rid)
+
+    def _sim_done(self, r: Replica, rid: int):
+        r.busy = False
+        if r.task.done:
+            # the replica was canceled or its executor killed mid-request:
+            # its allocation is gone, so the in-flight request fails (the
+            # fault model must not count work served by a dead replica)
+            self._fail_request(r, rid,
+                               f"replica {r.task.uid} {r.task.state.value}")
+            return
+        self._end_ts[rid] = self.engine.now()
+        self._ok[rid] = _OK
+        self._n_done += 1
+        r.outstanding -= 1
+        r.served += 1
+        if r.queue:
+            self._sim_start(r)
+        elif self._stopping:
+            self._maybe_stop_replica(r)
+
+    def _fail_request(self, r: Replica, rid: int, reason: str):
+        if self._end_ts[rid] >= 0.0:
+            return
+        self._end_ts[rid] = self.engine.now()
+        self._ok[rid] = _FAILED
+        self.results[rid] = reason
+        self._n_done += 1
+        r.outstanding -= 1
+
+    def _fail_replica_requests(self, r: Replica, task: Task):
+        """Requests still queued on a FAILED/CANCELED replica are recorded
+        as failed (requeue to survivors is ROADMAP future work)."""
+        reason = f"replica {task.uid} {task.state.value}"
+        if self._real:
+            try:
+                while True:
+                    item = r.queue.get_nowait()
+                    if item is not SVC_STOP:
+                        self._fail_request(r, item[0], reason)
+            except _thread_queue.Empty:
+                pass
+        else:
+            while r.queue:
+                self._fail_request(r, r.queue.popleft(), reason)
+
+    # real request execution (called by the replica's worker thread) ----
+    def _request_start(self, rid: int):
+        self._start_ts[rid] = self.engine.now()
+
+    def _request_complete(self, r: Replica, rid: int, result: Any, ok: bool):
+        self._end_ts[rid] = self.engine.now()
+        self._ok[rid] = _OK if ok else _FAILED
+        self._n_done += 1
+        self.results[rid] = result
+        r.outstanding -= 1
+        r.served += 1
+
+    # ------------------------------------------------------------------ stop
+    def stop(self):
+        """Graceful stop: serve everything already submitted (including
+        buffered requests), then drain and stop every replica. Replicas not
+        yet READY finalize as soon as they get there. Idempotent."""
+        with self.engine.lock:
+            if self._stopping:
+                return
+            self._stopping = True
+            self._maybe_stop_all()
+
+    def _maybe_stop_all(self):
+        for r in list(self._ready):
+            self._maybe_stop_replica(r)
+
+    def _maybe_stop_replica(self, r: Replica):
+        task = r.task
+        if task.done or self._buffer:
+            # undelivered buffered requests: the flush (at full readiness)
+            # must spread them across replicas before any replica drains
+            return
+        if self._real:
+            # DRAINING now; the serve loop works off what is already queued
+            # (sentinel is FIFO-ordered behind it) and then stops itself
+            if not r.stop_sent:
+                r.stop_sent = True
+                if task.state in (TaskState.READY, TaskState.SERVING):
+                    task.advance(TaskState.DRAINING, self.engine.now(),
+                                 self.engine.profiler)
+                r.queue.put(SVC_STOP)
+        elif not r.busy and not r.queue and r.outstanding == 0:
+            # sim: drained — finalize through the hosting executor so the
+            # allocation is released and on_complete reaches the agent
+            if task.state in (TaskState.READY, TaskState.SERVING):
+                task.advance(TaskState.DRAINING, self.engine.now(),
+                             self.engine.profiler)
+            ex = self.agent.backends.get(task.backend)
+            if ex is not None:
+                ex.stop_service(task)
+
+    # ------------------------------------------------------------------ state
+    @property
+    def n_ready(self) -> int:
+        return len(self._ready)
+
+    @property
+    def all_ready(self) -> bool:
+        return (self._flushed and self._ready
+                and len(self._ready) == self.n_replicas - self._n_terminal)
+
+    @property
+    def n_requests(self) -> int:
+        return len(self._submit_ts)
+
+    @property
+    def n_completed(self) -> int:
+        return self._n_done
+
+    @property
+    def outstanding(self) -> int:
+        return len(self._submit_ts) - self._n_done - len(self._buffer)
+
+    @property
+    def stopped(self) -> bool:
+        """All replica tasks reached a terminal state."""
+        return self._n_terminal >= self.n_replicas
+
+    def on_ready(self, cb: Callable[[], None]):
+        """Run ``cb`` once every replica is READY (immediately if they are)."""
+        with self.engine.lock:
+            if self.all_ready:
+                cb()
+            else:
+                self._ready_cbs.append(cb)
+
+    # ------------------------------------------------------------------ waits
+    def wait_ready(self, timeout: Optional[float] = None) -> bool:
+        """Block until every replica is READY (real engine; on the sim engine
+        this drains the event heap first — prefer ``on_ready`` there)."""
+        return self.engine.drain(lambda: self.all_ready or self.stopped,
+                                 timeout=timeout)
+
+    def wait_requests(self, timeout: Optional[float] = None) -> bool:
+        return self.engine.drain(
+            lambda: self._n_done >= len(self._submit_ts) or self.stopped,
+            timeout=timeout)
+
+    def wait_stopped(self, timeout: Optional[float] = None) -> bool:
+        return self.engine.drain(lambda: self.stopped, timeout=timeout)
+
+    # -------------------------------------------------------------- analytics
+    def request_log(self) -> Dict[str, Any]:
+        """Columnar request trace for analytics: parallel arrays of submit /
+        start / end timestamps and status codes (0 pending, 1 ok, 2 failed)."""
+        return {"submit": self._submit_ts, "start": self._start_ts,
+                "end": self._end_ts, "ok": self._ok}
+
+    def served_per_replica(self) -> Dict[str, int]:
+        return {uid: r.served for uid, r in self._replicas.items()}
+
+    def __repr__(self):
+        return (f"<Service {self.name} replicas={self.n_replicas} "
+                f"ready={self.n_ready} requests={self.n_requests} "
+                f"done={self._n_done}>")

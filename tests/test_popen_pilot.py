@@ -1,0 +1,144 @@
+"""Direct coverage for the popen executor's cancel/cleanup path and the
+Pilot state machine — previously exercised only indirectly through the
+campaign tests."""
+import time
+
+import pytest
+
+from repro.core.pilot import (Pilot, PilotDescription, PilotState)
+from repro.core.task import TaskDescription, TaskState
+from repro.runtime import PilotManager, Session, TaskManager
+
+
+# ----------------------------------------------------------------- popen
+def test_popen_cancel_queued_task_never_launches():
+    """A queued-behind-a-runner task canceled before its thread starts must
+    go CANCELED without executing (future canceled, no launch counted)."""
+    with Session(mode="real") as s:
+        pilot = PilotManager(s).submit_pilots(PilotDescription(
+            nodes=1, backends={"popen": {"workers": 1}}))
+        tmgr = TaskManager(s)
+        tmgr.add_pilots(pilot)
+        runner = tmgr.submit_tasks(TaskDescription(
+            kind="executable", executable="sleep", arguments=("0.5",)))
+        queued = tmgr.submit_tasks(TaskDescription(
+            kind="executable", executable="echo", arguments=("no",)))
+        ex = pilot.agent.backends["popen"]
+        deadline = time.monotonic() + 10.0
+        while queued.uid not in ex._futures:        # dispatched to the pool
+            assert time.monotonic() < deadline
+            time.sleep(0.01)
+        ex.cancel(queued)
+        assert tmgr.wait_tasks([runner], timeout=30)
+        assert runner.state == TaskState.DONE
+        assert queued.state == TaskState.CANCELED
+        assert queued.result is None
+        assert ex.stats["launched"] == 1            # the canceled one never ran
+
+
+def test_popen_cancel_running_discards_result():
+    """Canceling a task whose subprocess is already running leaves it
+    CANCELED; the payload's late commit is discarded."""
+    with Session(mode="real") as s:
+        pilot = PilotManager(s).submit_pilots(PilotDescription(
+            nodes=1, backends={"popen": {"workers": 1}}))
+        tmgr = TaskManager(s)
+        tmgr.add_pilots(pilot)
+        task = tmgr.submit_tasks(TaskDescription(
+            kind="executable", executable="sleep", arguments=("0.3",)))
+        ex = pilot.agent.backends["popen"]
+        deadline = time.monotonic() + 10.0
+        while task.state != TaskState.RUNNING:
+            assert time.monotonic() < deadline
+            time.sleep(0.01)
+        ex.cancel(task)
+        assert task.state == TaskState.CANCELED
+        time.sleep(0.5)                             # subprocess finishes
+        assert task.state == TaskState.CANCELED     # commit was discarded
+        assert task.result is None
+
+
+def test_popen_shutdown_cancels_queued_and_fails_late_submissions():
+    """Session close shuts the pool down: queued-but-unstarted payloads are
+    canceled (not executed after close), and submissions into a closed pool
+    fail the task instead of hanging."""
+    s = Session(mode="real")
+    pilot = PilotManager(s).submit_pilots(PilotDescription(
+        nodes=1, backends={"popen": {"workers": 1}}))
+    tmgr = TaskManager(s)
+    tmgr.add_pilots(pilot)
+    tmgr.submit_tasks(TaskDescription(
+        kind="executable", executable="sleep", arguments=("0.3",)))
+    backlog = tmgr.submit_tasks(
+        [TaskDescription(kind="executable", executable="echo",
+                         arguments=(i,)) for i in range(4)])
+    ex = pilot.agent.backends["popen"]
+    deadline = time.monotonic() + 10.0
+    while len(ex._futures) < 4:                     # all dispatched to pool
+        assert time.monotonic() < deadline
+        time.sleep(0.01)
+    s.close()
+    # cancel_futures dropped the queued payloads; none may run post-close
+    time.sleep(0.6)
+    assert all(t.result is None for t in backlog)
+    with pytest.raises(RuntimeError):               # pool really is down
+        ex._pool.submit(lambda: None)
+    # the executor's own submit() path degrades to a FAILED task
+    from repro.core.task import Task
+    t = Task(TaskDescription(kind="executable", executable="echo"))
+    t.advance(TaskState.SCHEDULING, 0.0)
+    t.advance(TaskState.QUEUED, 0.0)
+    ex.submit(t)
+    assert t.state == TaskState.FAILED and "shut" in t.error.lower()
+
+
+# ----------------------------------------------------------------- pilot
+def test_pilot_state_machine_legal_path_and_timestamps():
+    p = Pilot(PilotDescription(nodes=2))
+    assert p.state == PilotState.NEW
+    p.advance(PilotState.LAUNCHING, 1.0)
+    p.advance(PilotState.ACTIVE, 2.0)
+    p.advance(PilotState.DONE, 3.0)
+    assert p.timestamps == {"LAUNCHING": 1.0, "ACTIVE": 2.0, "DONE": 3.0}
+
+
+@pytest.mark.parametrize("start,illegal", [
+    (PilotState.NEW, PilotState.ACTIVE),        # must launch first
+    (PilotState.NEW, PilotState.DONE),
+    (PilotState.LAUNCHING, PilotState.DONE),    # not active yet
+])
+def test_pilot_state_machine_rejects_illegal(start, illegal):
+    p = Pilot(PilotDescription(nodes=1))
+    if start == PilotState.LAUNCHING:
+        p.advance(PilotState.LAUNCHING, 0.0)
+    with pytest.raises(RuntimeError, match="illegal"):
+        p.advance(illegal, 1.0)
+
+
+def test_pilot_terminal_states_are_final():
+    for terminal in (PilotState.DONE, PilotState.FAILED, PilotState.CANCELED):
+        p = Pilot(PilotDescription(nodes=1))
+        p.advance(PilotState.LAUNCHING, 0.0)
+        if terminal == PilotState.DONE:
+            p.advance(PilotState.ACTIVE, 0.5)
+        p.advance(terminal, 1.0)
+        for nxt in PilotState:
+            with pytest.raises(RuntimeError, match="illegal"):
+                p.advance(nxt, 2.0)
+
+
+def test_pilot_cancel_from_each_live_state():
+    pm_states = {}
+    with Session(mode="sim") as s:
+        pmgr = PilotManager(s)
+        launching = pmgr.submit_pilots(PilotDescription(nodes=1))
+        assert launching.state == PilotState.LAUNCHING
+        pmgr.cancel_pilots([launching])
+        assert launching.state == PilotState.CANCELED
+        active = pmgr.submit_pilots(PilotDescription(nodes=1))
+        s.engine.drain()
+        assert active.state == PilotState.ACTIVE
+        pmgr.cancel_pilots([active])
+        assert active.state == PilotState.CANCELED
+        pm_states["trace"] = len(s.profiler.by_name("pilot:CANCELED"))
+    assert pm_states["trace"] == 2
