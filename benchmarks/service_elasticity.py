@@ -1,0 +1,220 @@
+"""Service fault-model / elasticity benchmark -> BENCH_elasticity.json.
+
+Characterizes the service subsystem the way the RP characterization paper
+(arXiv:2103.00091) characterizes failure recovery — as a first-order
+throughput term — and the way RHAPSODY (arXiv:2503.13343) frames service
+elasticity as the mechanism that keeps hybrid AI-HPC campaigns utilized:
+
+* **chaos (sim)** — a Poisson-ish arrival stream against N replicas; 25% of
+  the rotation is killed mid-stream with RestartPolicy enabled. Acceptance:
+  no request is lost (every rid terminal) and sustained throughput recovers
+  to >= 80% of the no-failure baseline.
+* **autoscale (sim)** — an arrival stream that outruns the initial rotation;
+  the ScalePolicy provisions replicas from the least-outstanding queue
+  signal and drains them once the backlog clears.
+* **chaos (real)** — the same kill-mid-stream pass against real replica
+  worker threads (RealExecutorBase), restart included.
+
+Usage:
+    PYTHONPATH=src python benchmarks/service_elasticity.py            # default
+    PYTHONPATH=src python benchmarks/service_elasticity.py --quick    # CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Dict, List
+
+from repro.core.analytics import service_metrics
+from repro.core.pilot import PilotDescription
+from repro.runtime import PilotManager, Session, TaskManager
+from repro.services import RestartPolicy, ScalePolicy
+
+T0 = 30.0                    # arrival start: past agent + flux bootstrap
+
+
+def _no_lost(svc) -> bool:
+    log = svc.request_log()
+    return all(e >= 0.0 for e in log["end"]) and svc.outstanding == 0
+
+
+def sim_chaos_run(n_requests: int, replicas: int, rate: float,
+                  arrival_rate: float, kill_frac: float, seed: int,
+                  restart: bool) -> Dict:
+    """One sim campaign: arrival stream, optional mid-stream kills."""
+    n_kill = int(replicas * kill_frac)
+    wall0 = time.time()
+    with Session(mode="sim", seed=seed) as session:
+        pilot = PilotManager(session).submit_pilots(PilotDescription(
+            nodes=replicas + max(2, n_kill + 1),
+            backends={"flux": {"partitions": replicas + max(2, n_kill + 1)}}))
+        tmgr = TaskManager(session)
+        tmgr.add_pilots(pilot)
+        svc = tmgr.start_service(
+            replicas=replicas, nodes=1, startup=2.0, rate=rate,
+            balancer="least-outstanding", max_retries=3,
+            restart=(RestartPolicy(max_restarts=2 * max(1, n_kill),
+                                   backoff=1.0) if restart else None))
+        eng = session.engine
+        for i in range(n_requests):
+            eng.schedule(T0 + i / arrival_rate, svc.request, i)
+        t_mid = T0 + 0.4 * n_requests / arrival_rate
+        for k in range(n_kill):
+            eng.schedule(t_mid + 2.0 * k, svc.kill_replica)
+        eng.schedule(T0 + n_requests / arrival_rate + 0.5, svc.stop)
+        assert svc.wait_stopped(), "service did not stop"
+        m = service_metrics(svc)
+        return {
+            "config": (f"{replicas} replicas x {rate}/s, arrivals "
+                       f"{arrival_rate}/s, kill {n_kill}"
+                       f"{' + restart' if restart else ''}"),
+            "n_requests": n_requests,
+            "n_killed": n_kill,
+            "restart": restart,
+            "all_terminal": _no_lost(svc),
+            "n_ok": m.n_completed - m.n_failed,
+            "n_failed": m.n_failed,
+            "n_retried": m.n_retried,
+            "n_restarts": m.n_restarts,
+            "throughput": round(m.throughput, 3),
+            "latency_p50_s": round(m.latency_p50, 3),
+            "latency_p99_s": round(m.latency_p99, 3),
+            "wall_s": round(time.time() - wall0, 2),
+        }
+
+
+def sim_autoscale_run(n_requests: int, seed: int) -> Dict:
+    """Arrival stream that outruns the initial rotation: the ScalePolicy
+    must provision replicas, then drain them as the backlog clears."""
+    with Session(mode="sim", seed=seed) as session:
+        pilot = PilotManager(session).submit_pilots(PilotDescription(
+            nodes=12, backends={"flux": {"partitions": 10}}))
+        tmgr = TaskManager(session)
+        tmgr.add_pilots(pilot)
+        svc = tmgr.start_service(
+            replicas=2, nodes=1, startup=2.0, rate=1.0,
+            balancer="least-outstanding",
+            scale=ScalePolicy(min_replicas=2, max_replicas=8,
+                              up_threshold=3.0, down_threshold=0.5,
+                              cooldown=3.0))
+        eng = session.engine
+        for i in range(n_requests):                 # 6/s vs 2/s capacity
+            eng.schedule(T0 + i / 6.0, svc.request, i)
+        eng.schedule(T0 + n_requests / 6.0 + 120.0, svc.stop)
+        assert svc.wait_stopped(), "service did not stop"
+        m = service_metrics(svc)
+        log = svc.scale_log()
+        return {
+            "config": "autoscale 2..8 replicas, arrivals 6/s vs 1/s each",
+            "n_requests": n_requests,
+            "all_terminal": _no_lost(svc),
+            "n_ok": m.n_completed - m.n_failed,
+            "n_scale_up": m.n_scale_up,
+            "n_scale_down": m.n_scale_down,
+            "scale_events": [(round(t, 1), d)
+                             for t, d in zip(log["t"], log["delta"])],
+            "throughput": round(m.throughput, 3),
+            "latency_p99_s": round(m.latency_p99, 3),
+        }
+
+
+def _handler(x):
+    time.sleep(0.002)
+    return x
+
+
+def real_chaos_run(n_requests: int, seed: int) -> Dict:
+    """Kill a real replica worker thread mid-stream; restart replaces it."""
+    wall0 = time.time()
+    with Session(mode="real", seed=seed) as session:
+        pilot = PilotManager(session).submit_pilots(PilotDescription(
+            nodes=1, backends={"dragon": {"workers": 6}}))
+        tmgr = TaskManager(session)
+        tmgr.add_pilots(pilot)
+        svc = tmgr.start_service(
+            handler=_handler, replicas=3, balancer="least-outstanding",
+            max_retries=3, restart=RestartPolicy(max_restarts=2,
+                                                 backoff=0.05))
+        assert svc.wait_ready(timeout=60)
+        svc.submit_requests(range(n_requests))
+        session.engine.schedule(0.05, svc.kill_replica)
+        session.engine.drain(
+            lambda: svc.n_completed >= n_requests or svc.stopped,
+            timeout=300)
+        svc.stop()
+        assert svc.wait_stopped(timeout=60), "service did not stop"
+        m = service_metrics(svc)
+        return {
+            "config": "real: 3 replica threads, kill 1 mid-stream + restart",
+            "n_requests": n_requests,
+            "all_terminal": _no_lost(svc),
+            "n_ok": m.n_completed - m.n_failed,
+            "n_failed": m.n_failed,
+            "n_retried": m.n_retried,
+            "n_restarts": m.n_restarts,
+            "requests_per_s": round(m.throughput),
+            "wall_s": round(time.time() - wall0, 2),
+        }
+
+
+def main(argv: List[str] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: smaller streams")
+    ap.add_argument("--output", default="BENCH_elasticity.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    n_sim = 400 if args.quick else 1200
+    n_real = 200 if args.quick else 1000
+    replicas, rate, arrivals, kill_frac = 8, 2.0, 10.0, 0.25
+
+    base = sim_chaos_run(n_sim, replicas, rate, arrivals, 0.0, args.seed,
+                         restart=False)
+    chaos = sim_chaos_run(n_sim, replicas, rate, arrivals, kill_frac,
+                          args.seed, restart=True)
+    recovered = chaos["throughput"] / max(base["throughput"], 1e-9)
+    for r in (base, chaos):
+        print(f"[sim ] {r['config']:>52}  ok={r['n_ok']:>5}  "
+              f"failed={r['n_failed']}  thr={r['throughput']}/s", flush=True)
+    print(f"[sim ] recovered throughput: {recovered:.2f}x of baseline "
+          f"(acceptance: >=0.80, all rids terminal: "
+          f"{chaos['all_terminal']})", flush=True)
+
+    scale = sim_autoscale_run(n_sim // 2, args.seed)
+    print(f"[sim ] {scale['config']:>52}  ok={scale['n_ok']:>5}  "
+          f"up={scale['n_scale_up']} down={scale['n_scale_down']}",
+          flush=True)
+
+    real = real_chaos_run(n_real, args.seed)
+    print(f"[real] {real['config']:>52}  ok={real['n_ok']:>5}  "
+          f"restarts={real['n_restarts']}  "
+          f"req/s={real['requests_per_s']}", flush=True)
+
+    ok = (chaos["all_terminal"] and real["all_terminal"]
+          and scale["all_terminal"] and recovered >= 0.80
+          and scale["n_scale_up"] >= 1)
+    payload = {
+        "benchmark": "service_elasticity",
+        "protocol": ("sim: arrival stream against N flux-hosted replicas, "
+                     "25% of the rotation killed mid-stream with restart "
+                     "enabled, throughput from service_metrics vs a "
+                     "no-failure baseline; autoscale: over-subscribed "
+                     "arrivals against a ScalePolicy; real: kill a replica "
+                     "worker thread mid-stream with restart"),
+        "seed": args.seed,
+        "recovered_throughput_ratio": round(recovered, 3),
+        "acceptance_pass": ok,
+        "sim": [base, chaos, scale],
+        "real": [real],
+    }
+    with open(args.output, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.output} (acceptance_pass={ok})")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -260,6 +260,23 @@ class Agent:
                     gc.enable()
         return out
 
+    def resubmit(self, descriptions: List[TaskDescription],
+                 origin: str = "") -> List[Task]:
+        """Resubmission hook for the service fault model: replica restarts
+        and autoscale provisions re-enter the normal dispatch pipeline here
+        (routing, placement, resource allocation — exactly like a first
+        submission), with an ``agent:resubmit`` trace event carrying the
+        lineage so recovery overhead is measurable per the RP
+        characterization protocol."""
+        tasks = self.submit(descriptions)
+        profiler = self.engine.profiler
+        now = self.engine.now()
+        for t in tasks:
+            profiler.record(now, t.uid, "agent:resubmit",
+                            {"origin": origin
+                             or (t.description.restarted_from or "")})
+        return tasks
+
     def _pump_dispatch(self):
         if self._dispatch_busy or not self._dispatch_q:
             return

@@ -168,7 +168,7 @@ def concurrency_series(tasks: Sequence[Task], dt: float = 10.0
 class ServiceMetrics:
     n_requests: int
     n_completed: int
-    n_failed: int                  # handler raised (real mode)
+    n_failed: int                  # handler raised / retries exhausted
     latency_mean: float            # submit -> completion, queueing included
     latency_p50: float
     latency_p90: float
@@ -177,6 +177,12 @@ class ServiceMetrics:
     throughput: float              # completed requests / serving window
     utilization: float             # busy replica-seconds / (replicas x window)
     window: float                  # first request start -> last completion
+    # fault-model columns (requeue / restart / autoscale)
+    n_retried: int                 # requests completed OK after >=1 requeue
+    retries_total: int             # requeue dispatches across all requests
+    n_restarts: int                # replica replacements scheduled
+    n_scale_up: int                # autoscale provisions
+    n_scale_down: int              # autoscale drains
 
     def as_dict(self) -> Dict[str, float]:
         return self.__dict__.copy()
@@ -190,24 +196,46 @@ def service_metrics(service) -> ServiceMetrics:
     start = np.asarray(log["start"])
     end = np.asarray(log["end"])
     ok = np.frombuffer(bytes(log["ok"]), dtype=np.uint8)
+    retries = np.frombuffer(bytes(log.get("retries", b"")), dtype=np.uint8)
     n = len(submit)
-    done = end >= 0.0                     # completed (ok or handler-failed)
+    if len(retries) != n:
+        retries = np.zeros(n, dtype=np.uint8)
+    retries_total = int(retries.sum())
+    n_retried = int(((retries > 0) & (ok == 1)).sum())
+    n_restarts = int(getattr(service, "restarts", 0))
+    deltas = getattr(service, "scale_log", lambda: {"delta": ()})()["delta"]
+    n_scale_up = int(sum(1 for d in deltas if d > 0))
+    n_scale_down = int(sum(1 for d in deltas if d < 0))
+    done = end >= 0.0                     # completed (ok or failed)
     n_done = int(done.sum())
     n_failed = int((ok == 2).sum())
     if not n_done:
         return ServiceMetrics(n, 0, n_failed, 0.0, 0.0, 0.0, 0.0, 0.0,
-                              0.0, 0.0, 0.0)
+                              0.0, 0.0, 0.0, n_retried, retries_total,
+                              n_restarts, n_scale_up, n_scale_down)
+    started = done & (start >= 0.0)       # failed-in-buffer rids never start
     lat = end[done] - submit[done]
-    svc_t = end[done] - start[done]
+    svc_t = end[started] - start[started]
     p50, p90, p99 = np.percentile(lat, (50.0, 90.0, 99.0))
-    window = float(end[done].max() - start[done].min())
+    window = (float(end[done].max() - start[started].min())
+              if started.any() else 0.0)
     busy = float(svc_t.sum())
-    replicas = max(1, service.n_replicas)
-    util = busy / (replicas * window) if window > 0 else 0.0
+    # availability denominator: actual READY->terminal replica-seconds when
+    # the service can report them (exact under autoscaling/restart, where
+    # the replica count varies over the window); `replicas x window` is the
+    # fallback for plain fixed-rotation services
+    rs = getattr(service, "replica_seconds", None)
+    avail = rs() if rs is not None else 0.0
+    if avail <= 0.0:
+        avail = max(1, service.n_replicas) * window
+    util = busy / avail if avail > 0 else 0.0
     thr = n_done / window if window > 0 else float(n_done)
+    svc_mean = float(svc_t.mean()) if started.any() else 0.0
     return ServiceMetrics(n, n_done, n_failed, float(lat.mean()),
                           float(p50), float(p90), float(p99),
-                          float(svc_t.mean()), thr, min(1.0, util), window)
+                          svc_mean, thr, min(1.0, util), window,
+                          n_retried, retries_total, n_restarts,
+                          n_scale_up, n_scale_down)
 
 
 # --------------------------------------------------------------------------

@@ -89,9 +89,33 @@ class Campaign:
             return
         self._stage_pending[stage] -= 1
         if self._stage_pending[stage] == 0:
-            self._stage_complete(stage)
+            # elastic services outlive their original replica set: restart
+            # replacements and scale-ups are resubmitted internally (not
+            # stage tasks), so hold the stage open until *every* service
+            # owning one of its tasks has fully shut down — the last task
+            # to finish need not belong to the still-live service
+            services = {}
+            for t in self.stage_tasks.get(stage, []):
+                svc = t.description.service
+                if svc is not None:
+                    services[id(svc)] = svc
+            waiting = [svc for svc in services.values() if not svc.stopped]
+            if waiting:
+                remaining = {"n": len(waiting)}
+
+                def one_stopped(s=stage, remaining=remaining):
+                    remaining["n"] -= 1
+                    if remaining["n"] == 0:
+                        self._stage_complete(s)
+
+                for svc in waiting:
+                    svc.on_stopped(one_stopped)
+            else:
+                self._stage_complete(stage)
 
     def _stage_complete(self, name: str):
+        if name in self._done_stages:
+            return
         self._done_stages.add(name)
         self.agent.engine.profiler.record(self.agent.engine.now(), name,
                                           "stage:done", {})

@@ -77,6 +77,18 @@ class BaseExecutor(ABC):
                 s.finish_service(task)
                 return
 
+    def fail_task(self, task: Task, reason: str = "executor kill") -> bool:
+        """Fault injection: fail one running task in place (releasing its
+        resources) through the normal on_failure path — the per-task
+        analogue of a whole-instance ``kill()``. Returns True when the task
+        was found and failed. Default: delegate to whichever launch server
+        hosts it."""
+        for s in self._servers():
+            if task.uid in s.running:
+                s.fail_task(task, reason)
+                return True
+        return False
+
     def shutdown(self) -> None:
         """Release backend resources (thread pools, subprocesses)."""
 
@@ -328,6 +340,25 @@ class SimLaunchServer:
             # state.
             task.advance(TaskState.CANCELED, self.engine.now(),
                          self.engine.profiler)
+
+    def fail_task(self, task: Task, reason: str):
+        """Fail one running task in place (targeted fault injection /
+        replica chaos) — like ``kill()`` for a single task, without taking
+        the server down. Its resources are released and ``on_failure``
+        hands lifecycle control back to the agent."""
+        if self.running.pop(task.uid, None) is None:
+            return
+        ev = self._completion_events.pop(task.uid, None)
+        if ev is not None:
+            ev.cancel()
+        self._release(task)
+        self._stall_head = None            # pool changed: rescan
+        task.error = f"{self.name}: {reason}"
+        task.advance(TaskState.FAILED, self.engine.now(),
+                     self.engine.profiler)
+        if self.on_failure:
+            self.on_failure(task, task.error)
+        self.pump()
 
     def kill(self) -> List[Task]:
         """Server dies: running tasks fail; queued tasks are handed back

@@ -38,6 +38,10 @@ class _Worker:
 class SimFuncPoolExecutor(BaseExecutor):
     kind = "funcpool"
     accepts_static = True
+    # a service replica pins one pool worker for its whole lifetime
+    # (Dragon-style in-pool service hosting) — provision/drain against the
+    # live worker pool is what makes the pool a valid autoscaling target
+    supports_services = True
 
     def __init__(self, engine, n_nodes: int,
                  spec: NodeSpec = NodeSpec(cores=CAL.CORES_PER_NODE,
@@ -63,6 +67,8 @@ class SimFuncPoolExecutor(BaseExecutor):
 
     def accepts(self, task: Task) -> bool:
         d = task.description
+        if d.kind == "service":
+            return d.nodes == 0            # a worker is single-node by nature
         return d.kind == "function" and d.nodes == 0
 
     def submit(self, task: Task):
@@ -93,6 +99,18 @@ class SimFuncPoolExecutor(BaseExecutor):
         # in-worker dispatch has no separate placement stage: the worker
         # picks the call off the shared queue and executes it immediately
         task.advance(TaskState.LAUNCHING, now, engine.profiler)
+        if task.description.kind == "service":
+            # persistent replica: pin this worker, provision, then signal
+            # readiness; the worker returns to the pool at stop/failure
+            task.advance(TaskState.PROVISIONING, now, engine.profiler)
+            self.stats["launched"] += 1
+            w.task = task
+            self._running[task.uid] = w
+            svc = task.description.service
+            startup = svc.startup if svc is not None else 0.0
+            w.event = engine.schedule(max(startup, 1e-6),
+                                      self._service_ready, w, task)
+            return
         task.advance(TaskState.RUNNING, now, engine.profiler)
         self.stats["launched"] += 1
         w.task = task
@@ -119,6 +137,56 @@ class SimFuncPoolExecutor(BaseExecutor):
                 self._start(w, nxt)
                 return
         self._idle.append(w)
+
+    # --------------------------------------------------------------- services
+    def _service_ready(self, w: _Worker, task: Task):
+        if self._running.get(task.uid) is not w:
+            return                         # killed or canceled mid-boot
+        w.event = None
+        if task.state is not TaskState.PROVISIONING:
+            return
+        engine = self.engine
+        task.advance(TaskState.READY, engine.now(), engine.profiler)
+        svc = task.description.service
+        if svc is not None:
+            svc._replica_ready(task)
+
+    def _release_worker(self, w: _Worker):
+        w.task = None
+        w.event = None
+        self._idle.append(w)
+        self._pump()
+
+    def stop_service(self, task: Task):
+        """Complete a drained replica (DRAINING -> STOPPED) and return its
+        pinned worker to the pool."""
+        w = self._running.pop(task.uid, None)
+        if w is None:
+            return
+        engine = self.engine
+        if not task.done:
+            task.advance(TaskState.STOPPED, engine.now(), engine.profiler)
+            self.stats["completed"] += 1
+            if self.on_complete:
+                self.on_complete(task)
+        self._release_worker(w)
+
+    def fail_task(self, task: Task, reason: str = "executor kill") -> bool:
+        """Fault injection: fail one in-worker task (call or replica) and
+        free its worker through the normal on_failure path."""
+        w = self._running.pop(task.uid, None)
+        if w is None:
+            return False
+        if w.event is not None:
+            w.event.cancel()
+        task.error = f"{self.name}: {reason}"
+        task.advance(TaskState.FAILED, self.engine.now(),
+                     self.engine.profiler)
+        self.stats["failed"] += 1
+        if self.on_failure:
+            self.on_failure(task, task.error)
+        self._release_worker(w)
+        return True
 
     # ---------------------------------------------------------------- control
     def cancel(self, task: Task):

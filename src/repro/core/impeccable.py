@@ -76,13 +76,26 @@ def make_impeccable_stages(n_nodes: int, iterations: int = 3,
                            workflow="inference") for _ in range(infer)]
 
         def mk_infer_service(ctx: StageContext):
-            from repro.services import Service
+            from repro.services import RestartPolicy, ScalePolicy, Service
             _, infer = counts(ctx.free_cores)
             # replicas amortize model load (DRAGON-like startup) over the
-            # whole request stream; each request is one inference batch
-            svc = Service(ctx.agent, replicas=max(2, int(2 * f)), nodes=1,
+            # whole request stream; each request is one inference batch.
+            # The stage is *elastic*: dead replicas restart (the production
+            # campaign's services must survive node loss over a multi-day
+            # makespan) and the replica count tracks the request backlog
+            # through the least-outstanding queue signal, so the stream
+            # stays saturated instead of degrading to a fixed snapshot.
+            base = max(2, int(2 * f))
+            svc = Service(ctx.agent, replicas=base, nodes=1,
                           startup=CAL.DRAGON_STARTUP_S, rate=1.0 / duration,
                           balancer="least-outstanding",
+                          restart=RestartPolicy(max_restarts=max(2, int(f)),
+                                                backoff=CAL.DRAGON_STARTUP_S),
+                          scale=ScalePolicy(min_replicas=base,
+                                            max_replicas=max(base + 2,
+                                                             int(4 * f)),
+                                            up_threshold=6.0,
+                                            cooldown=2.0 * duration),
                           workflow="inference", name="inference")
             for _ in range(infer):
                 svc.request()                      # buffered until READY

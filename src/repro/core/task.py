@@ -95,6 +95,9 @@ class TaskDescription:
     service: Optional[Any] = None       # owning repro.services.Service for
                                         # kind="service" replicas (provides
                                         # startup/rate/handler + request queues)
+    restarted_from: Optional[str] = None  # restart lineage: uid of the failed
+                                          # replica this description replaces
+                                          # (chains across generations)
 
     # hand-written __init__ (same signature/defaults as the generated one,
     # __post_init__ folded in): descriptions are created once per task, so
@@ -106,7 +109,8 @@ class TaskDescription:
                  executable: str = "", arguments: Tuple = (),
                  coupling: str = "loose", backend: Optional[str] = None,
                  stage: str = "", workflow: str = "", max_retries: int = 0,
-                 service: Optional[Any] = None):
+                 service: Optional[Any] = None,
+                 restarted_from: Optional[str] = None):
         self.uid = uid or new_uid()
         self.kind = kind
         self.cores = cores
@@ -124,6 +128,7 @@ class TaskDescription:
         self.workflow = workflow
         self.max_retries = max_retries
         self.service = service
+        self.restarted_from = restarted_from
 
 
 class InvalidTransition(RuntimeError):

@@ -158,10 +158,13 @@ class RealExecutorBase(BaseExecutor):
                 break
             rid, payload = item
             with eng.lock:
-                if task.done:                     # canceled mid-serve
-                    svc._fail_request(replica, rid,
-                                      f"replica {task.uid} "
-                                      f"{task.state.value}")
+                if task.done:
+                    # replica killed/canceled between dispatch and pickup:
+                    # hand the request back for redispatch to survivors
+                    # (the fault model requeues before failing)
+                    svc._requeue_inflight(replica, rid,
+                                          f"replica {task.uid} "
+                                          f"{task.state.value}")
                     break
                 svc._request_start(rid)
             try:
@@ -192,6 +195,31 @@ class RealExecutorBase(BaseExecutor):
         q = self._service_queues.get(task.uid)
         if q is not None:
             q.put(SVC_STOP)
+
+    def fail_task(self, task: Task, reason: str = "executor kill") -> bool:
+        """Fault injection: fail one hosted task (batch payload or service
+        replica) through the normal on_failure path. For a replica, the
+        owning Service recovers its queued requests inside the on_failure
+        callback (same lock acquisition), and the stop sentinel — enqueued
+        after recovery so it is not swallowed by the queue drain — unblocks
+        the serve loop."""
+        eng = self.engine
+        with eng.lock:
+            if task.done:
+                return False
+            fut = self._futures.pop(task.uid, None)
+            if fut is not None:
+                fut.cancel()
+            task.error = f"{self.name}: {reason}"
+            task.advance(TaskState.FAILED, eng.now(), eng.profiler)
+            self.stats["failed"] += 1
+            if self.on_failure:
+                self.on_failure(task, task.error)
+            q = self._service_queues.get(task.uid)
+            if q is not None:              # unblock the replica's loop
+                q.put(SVC_STOP)
+        eng.notify()
+        return True
 
     # --------------------------------------------------------------- control
     def cancel(self, task: Task):

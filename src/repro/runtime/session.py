@@ -191,20 +191,26 @@ class TaskManager:
                       cores: int = 1, gpus: int = 0, nodes: int = 0,
                       startup: float = 0.0, rate: float = 0.0,
                       balancer="round-robin", backend: Optional[str] = None,
-                      name: str = "", workflow: str = ""):
+                      name: str = "", workflow: str = "",
+                      max_retries: int = 2, restart=None, scale=None):
         """Provision ``replicas`` persistent service tasks on the bound
         pilot and return the :class:`repro.services.Service` handle. The
         replica tasks flow through the normal dispatch pipeline and are
         tracked by this manager (``wait_tasks`` covers them); route requests
         with ``service.request(payload)`` / ``submit_requests`` — they are
         buffered until the replicas are READY — and finish with
-        ``service.stop()``."""
+        ``service.stop()``. The fault model is configured here too:
+        ``max_retries`` bounds request requeue on replica death, ``restart``
+        takes a :class:`repro.services.RestartPolicy` (replace dead
+        replicas), ``scale`` a :class:`repro.services.ScalePolicy` (elastic
+        replica count from the queue-depth signal)."""
         from repro.services import Service
 
         svc = Service(self.agent, handler=handler, replicas=replicas,
                       cores=cores, gpus=gpus, nodes=nodes, startup=startup,
                       rate=rate, balancer=balancer, backend=backend,
-                      name=name, workflow=workflow)
+                      name=name, workflow=workflow, max_retries=max_retries,
+                      restart=restart, scale=scale)
         self.submit_tasks(svc.descriptions())
         return svc
 

@@ -4,7 +4,10 @@ substrate (alongside executable and batch-function tasks).
 
 * :class:`Service` — N persistent replicas with the PROVISIONING -> READY ->
   SERVING -> DRAINING -> STOPPED lifecycle, fed by a request stream routed
-  with pluggable load balancing (round-robin, least-outstanding).
+  with pluggable load balancing (round-robin, least-outstanding). The fault
+  model requeues requests of dead replicas to survivors (``max_retries``),
+  replaces dead replicas through :class:`RestartPolicy`, and autoscales the
+  replica count through :class:`ScalePolicy`.
 * The ``funcpool`` executor backend (registered for both engines) — a
   Raptor/Dragon-style master/worker pool executing pickled callables inside
   persistent workers: no per-call process spawn in real mode, a calibrated
@@ -14,8 +17,10 @@ Entry points: ``TaskManager.start_service(...)`` and
 ``TaskManager.submit_functions(...)`` in ``repro.runtime.session``.
 """
 from repro.services.service import (LeastOutstandingBalancer, Replica,
-                                    RoundRobinBalancer, Service, SVC_STOP,
+                                    RestartPolicy, RoundRobinBalancer,
+                                    ScalePolicy, Service, SVC_STOP,
                                     make_balancer)
 
 __all__ = ["Service", "Replica", "RoundRobinBalancer",
-           "LeastOutstandingBalancer", "make_balancer", "SVC_STOP"]
+           "LeastOutstandingBalancer", "RestartPolicy", "ScalePolicy",
+           "make_balancer", "SVC_STOP"]

@@ -1,0 +1,434 @@
+"""Service fault model (repro.services): request requeue on replica death,
+replica restart through the normal dispatch pipeline, and elastic
+autoscaling — plus the stop-protocol bugfixes (stranded buffers, drain
+deadlock, balancer cursor drift).
+
+The chaos invariant throughout: *no request is ever lost*. Every rid ends
+either OK (possibly after requeue) or FAILED with an explicit reason; none
+stays PENDING once the service has stopped.
+"""
+import time
+
+from repro.core.agent import Agent, SimEngine
+from repro.core.analytics import service_metrics
+from repro.core.pilot import PilotDescription
+from repro.core.task import TaskState
+from repro.runtime import PilotManager, Session, TaskManager
+from repro.services import (RestartPolicy, RoundRobinBalancer, ScalePolicy,
+                            Service)
+
+
+def _assert_no_lost_rids(svc):
+    """Every rid terminal: OK or FAILED-with-reason, never PENDING."""
+    log = svc.request_log()
+    assert all(e >= 0.0 for e in log["end"]), "PENDING rid after shutdown"
+    for rid, code in enumerate(log["ok"]):
+        assert code in (1, 2)
+        if code == 2:
+            assert svc.results[rid], f"failed rid {rid} carries no reason"
+    assert svc.outstanding == 0
+
+
+def _sleep_ms(x):
+    time.sleep(0.002)
+    return x
+
+
+# ------------------------------------------------------------ chaos: requeue
+def test_sim_chaos_kill_mid_stream_zero_lost():
+    """Kill a replica mid-request on the sim engine with restart enabled:
+    its in-flight + queued requests requeue to survivors, a replacement is
+    provisioned through the dispatch pipeline, and no rid is lost."""
+    with Session(mode="sim", seed=0) as s:
+        pilot = PilotManager(s).submit_pilots(PilotDescription(
+            nodes=8, backends={"flux": {"partitions": 4}}))
+        tmgr = TaskManager(s)
+        tmgr.add_pilots(pilot)
+        svc = tmgr.start_service(replicas=3, nodes=1, startup=1.0, rate=1.0,
+                                 max_retries=3,
+                                 restart=RestartPolicy(max_restarts=2,
+                                                       backoff=0.5))
+        eng = s.engine
+        T0 = 30.0                         # past agent+flux bootstrap (~22 s)
+        for i in range(30):
+            eng.schedule(T0 + i * 0.2, svc.request, i)
+        eng.schedule(T0 + 3.0, svc.kill_replica)
+        eng.schedule(T0 + 30 * 0.2 + 0.1, svc.stop)
+        assert svc.wait_stopped()
+        _assert_no_lost_rids(svc)
+        m = service_metrics(svc)
+        assert m.n_completed == 30 and m.n_failed == 0
+        assert m.n_restarts >= 1
+        # the replacement actually served and carries the lineage
+        repl = [d for d in svc.all_descriptions() if d.restarted_from]
+        assert repl and all(
+            pilot.agent.tasks[d.uid].state == TaskState.STOPPED
+            for d in repl)
+        assert svc.error is not None          # the death was recorded
+
+
+def test_real_chaos_kill_mid_stream_zero_lost():
+    """The same chaos pass on the real engine: a replica worker thread is
+    failed mid-stream, its queued requests requeue to survivors, and the
+    RestartPolicy provisions a replacement worker thread."""
+    with Session(mode="real") as s:
+        pilot = PilotManager(s).submit_pilots(PilotDescription(
+            nodes=1, backends={"dragon": {"workers": 5}}))
+        tmgr = TaskManager(s)
+        tmgr.add_pilots(pilot)
+        svc = tmgr.start_service(handler=_sleep_ms, replicas=3,
+                                 max_retries=3,
+                                 restart=RestartPolicy(max_restarts=2,
+                                                       backoff=0.05))
+        assert svc.wait_ready(timeout=30)
+        svc.submit_requests(range(100))
+        s.engine.schedule(0.02, svc.kill_replica)
+        s.engine.drain(lambda: svc.n_completed >= 100 or svc.stopped,
+                       timeout=60)
+        svc.stop()
+        assert svc.wait_stopped(timeout=60)
+        _assert_no_lost_rids(svc)
+        m = service_metrics(svc)
+        assert m.n_completed == 100 and m.n_failed == 0
+        assert m.n_restarts >= 1
+        repl = [d for d in svc.all_descriptions() if d.restarted_from]
+        assert repl
+
+
+def test_sim_requeue_exhausts_retries_with_reason():
+    """With no survivors and no restart budget, requeued requests fail with
+    the dead replica's epitaph instead of stranding."""
+    eng = SimEngine(seed=0)
+    agent = Agent(eng, 8, {"flux": {"partitions": 2}})
+    agent.start()
+    svc = Service(agent, replicas=1, nodes=1, rate=0.5, max_retries=2)
+    svc.submit()
+    svc.submit_requests(range(10))
+    svc.stop()
+    eng.schedule(26.0, svc.kill_replica)
+    agent.run_until_complete()
+    assert svc.stopped
+    _assert_no_lost_rids(svc)
+    m = service_metrics(svc)
+    assert m.n_failed > 0
+    assert any("replica" in str(r) for r in svc.results if r)
+
+
+# ------------------------------------------------------------------ restart
+def test_restart_lineage_chains_across_generations():
+    """Killing the replacement too produces a second-generation description
+    whose ``restarted_from`` points at the first replacement."""
+    with Session(mode="sim", seed=0) as s:
+        pilot = PilotManager(s).submit_pilots(PilotDescription(
+            nodes=8, backends={"flux": {"partitions": 4}}))
+        tmgr = TaskManager(s)
+        tmgr.add_pilots(pilot)
+        svc = tmgr.start_service(replicas=2, nodes=1, startup=0.5, rate=2.0,
+                                 restart=RestartPolicy(max_restarts=4,
+                                                       backoff=0.5))
+        eng = s.engine
+        T0 = 30.0
+        for i in range(60):
+            eng.schedule(T0 + i * 0.2, svc.request, i)
+        first_uid = svc.descriptions()[0].uid
+        eng.schedule(T0 + 2.0, svc.kill_replica, first_uid)
+
+        def kill_replacement():
+            repl = [d for d in svc.all_descriptions()
+                    if d.restarted_from == first_uid]
+            if repl:
+                svc.kill_replica(repl[0].uid)
+        eng.schedule(T0 + 7.0, kill_replacement)
+        eng.schedule(T0 + 60 * 0.2 + 0.1, svc.stop)
+        assert svc.wait_stopped()
+        gen1 = [d for d in svc.all_descriptions()
+                if d.restarted_from == first_uid]
+        assert len(gen1) == 1
+        gen2 = [d for d in svc.all_descriptions()
+                if d.restarted_from == gen1[0].uid]
+        assert len(gen2) == 1
+        assert svc.restarts == 2
+        assert len(s.profiler.by_name("service:restart")) == 2
+        assert len(s.profiler.by_name("agent:resubmit")) == 2
+        _assert_no_lost_rids(svc)
+
+
+def test_restart_budget_respected():
+    """max_restarts bounds replacements: once spent, a dead rotation stays
+    dead and the service stops (requests fail, none strand)."""
+    eng = SimEngine(seed=0)
+    agent = Agent(eng, 8, {"flux": {"partitions": 4}})
+    agent.start()
+    svc = Service(agent, replicas=2, nodes=1, rate=1.0, max_retries=1,
+                  restart=RestartPolicy(max_restarts=1, backoff=0.2))
+    svc.submit()
+    svc.submit_requests(range(40))
+    svc.stop()
+    # kill everything that ever becomes ready, repeatedly
+    for t in (30.0, 31.0, 32.0, 33.0, 34.0):
+        eng.schedule(t, svc.kill_replica)
+    agent.run_until_complete()
+    assert svc.stopped
+    assert svc.restarts == 1              # budget, not the kill count
+    _assert_no_lost_rids(svc)
+
+
+# -------------------------------------------------------------- autoscaling
+def test_autoscale_up_and_down():
+    """An arrival stream that outruns the initial rotation provisions
+    replicas up to max_replicas; once the backlog drains, idle replicas are
+    drained back toward min_replicas. Scale events land in the columnar
+    scale log and every replica task ends STOPPED."""
+    with Session(mode="sim", seed=0) as s:
+        pilot = PilotManager(s).submit_pilots(PilotDescription(
+            nodes=16, backends={"flux": {"partitions": 8}}))
+        tmgr = TaskManager(s)
+        tmgr.add_pilots(pilot)
+        svc = tmgr.start_service(replicas=2, nodes=1, startup=0.5, rate=1.0,
+                                 balancer="least-outstanding",
+                                 scale=ScalePolicy(min_replicas=2,
+                                                   max_replicas=6,
+                                                   up_threshold=3.0,
+                                                   down_threshold=0.5,
+                                                   cooldown=2.0))
+        eng = s.engine
+        T0 = 30.0
+        # 8 req/s against 2 replicas x 1 req/s: must scale up to keep up;
+        # the tail (arrivals stop) must scale back down
+        for i in range(160):
+            eng.schedule(T0 + i * 0.125, svc.request, i)
+        eng.schedule(T0 + 160 * 0.125 + 60.0, svc.stop)
+        assert svc.wait_stopped()
+        m = service_metrics(svc)
+        assert m.n_completed == 160 and m.n_failed == 0
+        assert m.n_scale_up >= 2, svc.scale_log()
+        assert m.n_scale_down >= 1, svc.scale_log()
+        assert svc.n_replicas <= 6
+        log = svc.scale_log()
+        assert len(log["t"]) == len(log["delta"]) == (m.n_scale_up
+                                                      + m.n_scale_down)
+        for d in svc.all_descriptions():
+            assert pilot.agent.tasks[d.uid].state == TaskState.STOPPED
+        _assert_no_lost_rids(svc)
+
+
+def test_autoscale_respects_bounds():
+    """The rotation never exceeds max_replicas live replicas nor drains
+    below min_replicas while requests flow."""
+    with Session(mode="sim", seed=0) as s:
+        pilot = PilotManager(s).submit_pilots(PilotDescription(
+            nodes=16, backends={"flux": {"partitions": 8}}))
+        tmgr = TaskManager(s)
+        tmgr.add_pilots(pilot)
+        svc = tmgr.start_service(replicas=2, nodes=1, rate=0.5,
+                                 scale=ScalePolicy(min_replicas=2,
+                                                   max_replicas=3,
+                                                   up_threshold=1.0,
+                                                   cooldown=0.5))
+        eng = s.engine
+        peak = {"live": 0}
+        orig = svc._maybe_scale
+
+        def watched():
+            orig()
+            peak["live"] = max(peak["live"], svc.n_live)
+        svc._maybe_scale = watched
+        T0 = 30.0
+        for i in range(100):
+            eng.schedule(T0 + i * 0.1, svc.request, i)
+        eng.schedule(T0 + 11.0, svc.stop)
+        assert svc.wait_stopped()
+        assert peak["live"] <= 3
+        assert service_metrics(svc).n_scale_up == 1
+        _assert_no_lost_rids(svc)
+
+
+# --------------------------------------------- satellite: stranded buffers
+def test_buffered_requests_fail_when_all_replicas_die_before_ready():
+    """Satellite bugfix: every replica dies before readiness with requests
+    still buffered — they must fail (with a reason) when the service goes
+    terminal, not strand as PENDING with ``outstanding`` undercounting."""
+    eng = SimEngine(seed=0)
+    agent = Agent(eng, 8, {"flux": {"partitions": 2}})
+    agent.start()
+    svc = Service(agent, replicas=2, nodes=1, startup=10.0, rate=1.0)
+    svc.submit()
+    svc.submit_requests(range(5))
+    for d in svc.descriptions():
+        eng.schedule(25.0, svc.kill_replica, d.uid)  # mid-PROVISIONING
+    agent.run_until_complete()
+    assert svc.stopped
+    _assert_no_lost_rids(svc)
+    m = service_metrics(svc)
+    assert m.n_completed == 5 and m.n_failed == 5
+    assert all(svc.results)
+
+
+def test_replica_killed_during_scale_down_drain_is_replaced():
+    """A draining replica must not count as target coverage: killing a
+    sibling while the drain is in flight still schedules a replacement."""
+    with Session(mode="sim", seed=0) as s:
+        pilot = PilotManager(s).submit_pilots(PilotDescription(
+            nodes=8, backends={"flux": {"partitions": 6}}))
+        tmgr = TaskManager(s)
+        tmgr.add_pilots(pilot)
+        svc = tmgr.start_service(replicas=3, nodes=1, rate=1.0,
+                                 max_retries=2,
+                                 restart=RestartPolicy(max_restarts=2,
+                                                       backoff=0.5))
+        eng = s.engine
+        T0 = 30.0
+        for i in range(40):
+            eng.schedule(T0 + i * 0.2, svc.request, i)
+
+        def drain_then_kill():
+            # autoscale-style drain of one replica, then chaos on a sibling
+            # while the target (3 -> 2) is already met by live count alone
+            with eng.lock:
+                svc.n_replicas -= 1
+                idle = [r for r in svc._rotation() if r.outstanding == 0]
+                svc._drain_replica((idle or svc._rotation())[0])
+                sibling = svc._rotation()[0].task.uid   # not the drainer
+            svc.kill_replica(sibling)
+        eng.schedule(T0 + 3.0, drain_then_kill)
+        eng.schedule(T0 + 40 * 0.2 + 0.1, svc.stop)
+        assert svc.wait_stopped()
+        assert svc.restarts == 1          # the death was covered
+        m = service_metrics(svc)
+        assert m.n_completed == 40 and m.n_failed == 0
+        _assert_no_lost_rids(svc)
+
+
+def test_request_after_replica_exhaustion_rejected():
+    """Once every replica is dead with nothing pending (no stop() call),
+    request() raises instead of buffering a rid that can never be served."""
+    eng = SimEngine(seed=0)
+    agent = Agent(eng, 8, {"flux": {"partitions": 2}})
+    agent.start()
+    svc = Service(agent, replicas=1, nodes=1, rate=1.0)
+    svc.submit()
+    eng.schedule(25.0, svc.kill_replica)
+    agent.run_until_complete()
+    assert svc.stopped
+    import pytest
+    with pytest.raises(RuntimeError, match="no new requests"):
+        svc.request(0)
+
+
+def test_kill_replica_rejects_foreign_uid():
+    """A uid that does not belong to this service is not a chaos target —
+    it must not fail an unrelated agent task."""
+    from repro.core.task import TaskDescription
+
+    eng = SimEngine(seed=0)
+    agent = Agent(eng, 8, {"flux": {"partitions": 2}})
+    agent.start()
+    svc = Service(agent, replicas=1, nodes=1, rate=1.0)
+    svc.submit()
+    bystander = agent.submit([TaskDescription(duration=50.0, nodes=1)])[0]
+    eng.schedule(25.0, svc.kill_replica, bystander.uid)
+    svc.stop()
+    agent.run_until_complete()
+    assert bystander.state == TaskState.DONE     # untouched by the chaos
+
+
+# ------------------------------------------------ satellite: stop deadlock
+def test_stop_flushes_buffer_when_full_readiness_unreachable():
+    """Satellite bugfix: with more replicas than the pool can host at once,
+    the queued replica only launches after a ready one drains — but the
+    ready ones used to refuse to drain while the buffer waited for full
+    readiness. stop() now flushes the buffer against the live rotation and
+    the service winds down instead of hanging wait_stopped."""
+    with Session(mode="sim", seed=0) as s:
+        pilot = PilotManager(s).submit_pilots(PilotDescription(
+            nodes=2, backends={"flux": {"partitions": 2}}))
+        tmgr = TaskManager(s)
+        tmgr.add_pilots(pilot)
+        # 3 single-node replicas on a 2-node pool: full readiness unreachable
+        svc = tmgr.start_service(replicas=3, nodes=1, startup=0.5, rate=2.0)
+        svc.submit_requests(range(12))
+        svc.stop()
+        assert svc.wait_stopped()
+        m = service_metrics(svc)
+        assert m.n_completed == 12 and m.n_failed == 0
+        _assert_no_lost_rids(svc)
+        for d in svc.descriptions():
+            assert pilot.agent.tasks[d.uid].state == TaskState.STOPPED
+
+
+# ------------------------------------------- satellite: round-robin cursor
+def test_round_robin_cursor_stable_under_removal():
+    """Satellite bugfix: removing a replica ahead of the cursor used to
+    skew the next pick onto whichever replica filled the removed slot; the
+    compensated cursor continues the rotation."""
+    class R:
+        def __init__(self, tag):
+            self.tag = tag
+
+    a, b, c = R("a"), R("b"), R("c")
+    rr = RoundRobinBalancer()
+    replicas = [a, b, c]
+    assert rr.pick(replicas) is a
+    assert rr.pick(replicas) is b
+    # replica a dies: the service removes index 0 and tells the balancer
+    replicas.pop(0)
+    rr.note_removed(0)
+    assert rr.pick(replicas) is c         # rotation continues after b
+    assert rr.pick(replicas) is b
+    # growth (autoscale) keeps cycling over the full list
+    d = R("d")
+    replicas.append(d)
+    assert rr.pick(replicas) is c
+    assert rr.pick(replicas) is d
+
+
+def test_round_robin_spread_survives_mid_rotation_death():
+    """Integration: with a replica killed mid-stream and requeue enabled,
+    the remaining spread stays balanced (no survivor gets starved)."""
+    with Session(mode="sim", seed=0) as s:
+        pilot = PilotManager(s).submit_pilots(PilotDescription(
+            nodes=8, backends={"flux": {"partitions": 4}}))
+        tmgr = TaskManager(s)
+        tmgr.add_pilots(pilot)
+        svc = tmgr.start_service(replicas=4, nodes=1, rate=2.0,
+                                 balancer="round-robin", max_retries=2)
+        eng = s.engine
+        T0 = 30.0
+        for i in range(80):
+            eng.schedule(T0 + i * 0.2, svc.request, i)
+        eng.schedule(T0 + 5.0, svc.kill_replica)
+        eng.schedule(T0 + 80 * 0.2 + 0.1, svc.stop)
+        assert svc.wait_stopped()
+        m = service_metrics(svc)
+        assert m.n_completed == 80 and m.n_failed == 0
+        # the killed replica served its partial share; the three survivors
+        # must stay balanced (cursor compensated, no double-loaded slot)
+        served = sorted(svc.served_per_replica().values())[-3:]
+        assert served[0] >= served[-1] - 3, svc.served_per_replica()
+
+
+# ------------------------------------------------- funcpool service hosting
+def test_sim_funcpool_hosts_service_replicas():
+    """The sim funcpool pins one worker per replica (provision/drain against
+    the live pool): batch functions keep flowing on the remaining workers
+    and the worker returns to the pool at stop."""
+    with Session(mode="sim", seed=0) as s:
+        pilot = PilotManager(s).submit_pilots(PilotDescription(
+            nodes=1, backends={"funcpool": {"workers": 4}}))
+        tmgr = TaskManager(s)
+        tmgr.add_pilots(pilot)
+        ex = pilot.agent.backends["funcpool"]
+        svc = tmgr.start_service(replicas=2, rate=5.0, backend="funcpool")
+        svc.submit_requests(range(20))
+        svc.stop()
+        from repro.core.task import TaskDescription
+        fns = tmgr.submit_tasks([TaskDescription(kind="function")
+                                 for _ in range(10)])
+        assert tmgr.wait_tasks()
+        assert svc.stopped
+        m = service_metrics(svc)
+        assert m.n_completed == 20 and m.n_failed == 0
+        assert all(t.state == TaskState.DONE for t in fns)
+        assert ex.free_cores == 4             # workers back in the pool
+        for d in svc.descriptions():
+            assert tmgr.tasks[d.uid].state == TaskState.STOPPED

@@ -137,6 +137,9 @@ def test_service_campaign_cross_engine(mode):
         assert camp.complete, mode
         svc = holder["svc"]
         assert svc.stopped and svc.n_completed == 10
+        # n_completed counts failed requests too — pin that none failed
+        # (a stop() racing provisioning once failed the whole buffer here)
+        assert service_metrics(svc).n_failed == 0, mode
         for t in camp.stage_tasks["serve"]:
             assert t.state == TaskState.STOPPED, mode
         # the post stage started only after the service drained
@@ -196,14 +199,37 @@ def test_adaptive_policy_respects_service_capability():
     assert all(t.state == TaskState.STOPPED for t in tasks)
 
 
-def test_replica_failure_fails_its_requests_and_service_drains():
-    """Killing the executor instance under a SERVING replica fails that
-    replica's queued/in-flight requests (they are not silently counted as
-    served) while survivors keep draining; the service still stops."""
+def test_replica_failure_requeues_requests_to_survivors():
+    """Killing the executor instance under a SERVING replica re-dispatches
+    its queued/in-flight requests to the surviving replica through the
+    balancer (nothing is silently counted as served, nothing is lost); the
+    survivor drains and the service still stops."""
     eng = SimEngine(seed=0)
     agent = Agent(eng, 8, {"flux": {"partitions": 2}})
     agent.start()
     svc = Service(agent, replicas=2, nodes=1, rate=1.0)
+    svc.submit()
+    svc.submit_requests(range(40))
+    svc.stop()
+    eng.schedule(30.0, agent.fail_flux_instance, 0, "flux", False)
+    agent.run_until_complete()
+    assert svc.stopped and svc.error is not None
+    m = service_metrics(svc)
+    assert m.n_completed == 40                  # every request accounted for
+    assert m.n_failed == 0                      # requeue saved all of them
+    assert m.n_retried > 0 and m.retries_total >= m.n_retried
+    states = {agent.tasks[d.uid].state for d in svc.descriptions()}
+    assert states == {TaskState.STOPPED, TaskState.FAILED}
+
+
+def test_replica_failure_without_retries_fails_its_requests():
+    """With requeue disabled (max_retries=0) the seed semantics hold: the
+    dead replica's queued/in-flight requests fail with its epitaph while
+    survivors keep draining."""
+    eng = SimEngine(seed=0)
+    agent = Agent(eng, 8, {"flux": {"partitions": 2}})
+    agent.start()
+    svc = Service(agent, replicas=2, nodes=1, rate=1.0, max_retries=0)
     svc.submit()
     svc.submit_requests(range(40))
     svc.stop()
