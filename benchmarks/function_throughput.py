@@ -149,6 +149,19 @@ def main(argv: List[str] = None) -> int:
         print(f"[sim ] function/executable dispatch-rate ratio: "
               f"{ratio:.1f}x (acceptance: >=5x)", flush=True)
 
+    # carry the previous run's funcpool rate forward so the batched-queue
+    # trajectory (before/after) is recorded in the artifact itself
+    prev_calls_per_s = None
+    if os.path.exists(args.output):
+        try:
+            with open(args.output) as f:
+                for r in json.load(f).get("real", []):
+                    if "calls_per_s" in r:
+                        prev_calls_per_s = r["calls_per_s"]
+                        break
+        except (ValueError, OSError):
+            pass
+
     fp = real_funcpool_run(n_real, args.workers, args.seed)
     print(f"[real] {fp['config']:>24}  n={fp['n_calls']:>9,}  "
           f"calls/s={fp['calls_per_s']:>6,}  "
@@ -171,6 +184,7 @@ def main(argv: List[str] = None) -> int:
         "sim_nodes": SIM_NODES,
         "seed": args.seed,
         "function_vs_executable_ratio": ratios,
+        "funcpool_prev_calls_per_s": prev_calls_per_s,
         "sim": sim_results,
         "real": [fp, svc],
     }

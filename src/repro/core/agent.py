@@ -260,6 +260,32 @@ class Agent:
                     gc.enable()
         return out
 
+    def submit_prepared(self, prepared: List[Task]) -> List[Task]:
+        """Ingest Task objects built (and possibly held) by a campaign
+        scheduler (repro.sched). Tasks already advanced to SCHEDULING at
+        scheduler admission keep that timestamp — their measured wait
+        covers the scheduler hold, not just the dispatch queue."""
+        engine = self.engine
+        with engine.lock:
+            gc_was_enabled = gc.isenabled()
+            if gc_was_enabled:
+                gc.disable()
+            try:
+                now = engine.now
+                profiler = engine.profiler
+                tasks = self.tasks
+                append = self._dispatch_q.append
+                for task in prepared:
+                    tasks[task.uid] = task
+                    if task.state is TaskState.NEW:
+                        task.advance(TaskState.SCHEDULING, now(), profiler)
+                    append(task)
+                self._pump_dispatch()
+            finally:
+                if gc_was_enabled:
+                    gc.enable()
+        return prepared
+
     def resubmit(self, descriptions: List[TaskDescription],
                  origin: str = "") -> List[Task]:
         """Resubmission hook for the service fault model: replica restarts
@@ -269,13 +295,24 @@ class Agent:
         lineage so recovery overhead is measurable per the RP
         characterization protocol."""
         tasks = self.submit(descriptions)
+        self._record_resubmit(tasks, origin)
+        return tasks
+
+    def resubmit_prepared(self, prepared: List[Task],
+                          origin: str = "") -> List[Task]:
+        """`submit_prepared` + the ``agent:resubmit`` lineage trace — the
+        scheduler-mediated variant of :meth:`resubmit`."""
+        self.submit_prepared(prepared)
+        self._record_resubmit(prepared, origin)
+        return prepared
+
+    def _record_resubmit(self, tasks: List[Task], origin: str):
         profiler = self.engine.profiler
         now = self.engine.now()
         for t in tasks:
             profiler.record(now, t.uid, "agent:resubmit",
                             {"origin": origin
                              or (t.description.restarted_from or "")})
-        return tasks
 
     def _pump_dispatch(self):
         if self._dispatch_busy or not self._dispatch_q:
@@ -510,3 +547,24 @@ class Agent:
     @property
     def total_cores(self) -> int:
         return self.n_nodes * self.node_spec.cores
+
+    # ------------------------------------------------------------ load signals
+    # (the campaign scheduler's cross-pilot cost model reads these)
+    @property
+    def dispatch_depth(self) -> int:
+        """Tasks waiting in the agent's own dispatch queue."""
+        return len(self._dispatch_q)
+
+    @property
+    def backend_depth(self) -> int:
+        """Tasks enqueued in backend executors, not yet launched."""
+        return sum(ex.queue_depth for ex in self.backends.values())
+
+    @property
+    def free_cores(self) -> int:
+        """Idle cores across all backends (funcpool counts idle workers)."""
+        return sum(ex.free_cores for ex in self.backends.values())
+
+    @property
+    def dispatch_rate(self) -> float:
+        return 1.0 / self.dispatch_interval

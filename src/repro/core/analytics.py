@@ -160,6 +160,98 @@ def concurrency_series(tasks: Sequence[Task], dt: float = 10.0
 
 
 # --------------------------------------------------------------------------
+# Campaign-scheduler analytics (repro.sched): per-class wait-time
+# distributions and weighted fairness over the task trace.
+# --------------------------------------------------------------------------
+
+@dataclass
+class ClassWait:
+    """Wait-time distribution for one scheduling class (tenant / priority
+    level / stage): scheduler admission (SCHEDULING) to execution start."""
+    n: int
+    n_started: int
+    wait_mean: float
+    wait_p50: float
+    wait_p99: float
+    wait_max: float
+    served_core_s: float           # width x runtime actually delivered
+    weight: float                  # fair-share weight (max share seen)
+
+    def as_dict(self) -> Dict[str, float]:
+        return self.__dict__.copy()
+
+
+@dataclass
+class SchedMetrics:
+    by_class: Dict[str, ClassWait]
+    fairness: float                # Jain index over served_core_s / weight
+
+    def as_dict(self) -> Dict[str, object]:
+        return {"by_class": {k: v.as_dict()
+                             for k, v in self.by_class.items()},
+                "fairness": self.fairness}
+
+
+def _task_class(t: Task, by: str) -> str:
+    d = t.description
+    if by == "tenant":
+        return d.tenant or "default"
+    if by == "priority":
+        return str(d.priority)
+    if by == "stage":
+        return d.stage or "default"
+    raise KeyError(f"unknown class key {by!r} (tenant|priority|stage)")
+
+
+def sched_metrics(tasks: Sequence[Task], by: str = "tenant"
+                  ) -> SchedMetrics:
+    """Scheduling-quality metrics per class: wait percentiles (admission to
+    start — scheduler hold plus dispatch plus backend queueing) and the
+    Jain fairness index over weighted served work, the quantity a
+    fair-share policy equalizes. Services count PROVISIONING as their
+    start; tasks that never started contribute to ``n`` only."""
+    groups: Dict[str, List[Task]] = {}
+    for t in tasks:
+        groups.setdefault(_task_class(t, by), []).append(t)
+    by_class: Dict[str, ClassWait] = {}
+    shares: List[float] = []
+    for cls, ts in sorted(groups.items()):
+        waits: List[float] = []
+        served = 0.0
+        weight = 0.0
+        for t in ts:
+            d = t.description
+            weight = max(weight, d.share)
+            stamps = t.timestamps
+            start = stamps.get("RUNNING", stamps.get("PROVISIONING"))
+            if start is None or "SCHEDULING" not in stamps:
+                continue
+            waits.append(start - stamps["SCHEDULING"])
+            end = stamps.get("DONE", stamps.get("STOPPED"))
+            if end is not None:
+                width = (d.nodes * CORES_PER_NODE if d.nodes
+                         else max(1, d.cores))
+                served += width * (end - start)
+        if waits:
+            w = np.asarray(waits)
+            p50, p99 = np.percentile(w, (50.0, 99.0))
+            by_class[cls] = ClassWait(len(ts), len(waits), float(w.mean()),
+                                      float(p50), float(p99),
+                                      float(w.max()), served,
+                                      weight or 1.0)
+        else:
+            by_class[cls] = ClassWait(len(ts), 0, 0.0, 0.0, 0.0, 0.0,
+                                      served, weight or 1.0)
+        shares.append(served / (weight or 1.0))
+    x = np.asarray([s for s in shares if s > 0.0])
+    if x.size:
+        fairness = float((x.sum() ** 2) / (x.size * (x * x).sum()))
+    else:
+        fairness = 1.0
+    return SchedMetrics(by_class, fairness)
+
+
+# --------------------------------------------------------------------------
 # Service-task analytics (repro.services): request-latency percentiles and
 # per-service utilization over the columnar request log.
 # --------------------------------------------------------------------------

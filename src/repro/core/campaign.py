@@ -1,6 +1,14 @@
 """Workflow-of-workflows engine: stages with dependencies, adaptive task
 generation from runtime feedback (idle-resource polling), per-stage metrics.
-This is the layer the IMPECCABLE campaign (§2) runs on."""
+This is the layer the IMPECCABLE campaign (§2) runs on.
+
+A campaign submits to a *target*: either an :class:`~repro.core.agent.Agent`
+(direct, seed behavior) or a :class:`repro.sched.CampaignScheduler`
+(hierarchical scheduling: stage priorities/tenants order the queue, and
+``barrier=False`` stages release per task — each task enters the scheduler
+queue as its individual upstreams finish instead of waiting for the whole
+upstream stage, removing barriers the paper's workflows don't have).
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
@@ -15,11 +23,21 @@ class Stage:
     """``make_tasks(ctx)`` is called when all dependencies completed; it may
     inspect ``ctx`` (agent, free resources, previous-stage results) to size
     the workload adaptively (§4.2: "the number of tasks instantiated by some
-    workflows is adjusted dynamically at runtime")."""
+    workflows is adjusted dynamically at runtime").
+
+    ``priority``/``tenant`` stamp every task the stage creates (scheduler
+    ordering classes / fair-share accounts). ``barrier=False`` launches the
+    stage as soon as its upstream stages have *launched* — its tasks carry
+    per-task ``after`` dependencies (auto-wired 1:1 against a single
+    same-sized upstream stage, else against all upstream tasks) and are
+    released by the scheduler as those upstreams finish individually."""
     name: str
     make_tasks: Callable[["StageContext"], List[TaskDescription]]
     depends_on: Sequence[str] = ()
     workflow: str = ""
+    priority: int = 0
+    tenant: str = ""
+    barrier: bool = True
 
 
 @dataclass
@@ -30,18 +48,29 @@ class StageContext:
 
     @property
     def free_cores(self) -> int:
-        return sum(ex.free_cores for ex in self.agent.backends.values())
+        # spans every pilot when the campaign targets a scheduler
+        return self.campaign.target.free_cores
 
     def results(self, stage_name: str) -> List[Task]:
         return self.campaign.stage_tasks.get(stage_name, [])
 
 
 class Campaign:
-    def __init__(self, agent: Agent, stages: Sequence[Stage],
+    def __init__(self, target, stages: Sequence[Stage],
                  name: str = "campaign"):
-        self.agent = agent
+        self.target = target
+        # ctx.agent compatibility: stages that build Services or inspect
+        # backends get the primary agent even under a scheduler target
+        agents = getattr(target, "agents", None)
+        self.agent: Agent = agents[0] if agents else target
         self.name = name
         self.stages = {s.name: s for s in stages}
+        if (any(not s.barrier for s in stages)
+                and not getattr(target, "supports_deps", False)):
+            raise ValueError(
+                f"{name}: barrier=False stages need a CampaignScheduler "
+                f"target (per-task `after` dependencies are released by "
+                f"the scheduler, not by a bare Agent)")
         self._waiting: Dict[str, set] = {
             s.name: set(s.depends_on) for s in stages}
         self.stage_tasks: Dict[str, List[Task]] = {}
@@ -52,14 +81,18 @@ class Campaign:
         # register (not assign): previously this clobbered any installed
         # on_task_done, so campaigns didn't compose with other watchers
         # (service readiness, user callbacks) on the same agent
-        agent.add_done_callback(self._task_done)
+        target.add_done_callback(self._task_done)
+
+    @property
+    def engine(self):
+        return self.target.engine
 
     # ------------------------------------------------------------------ run
     def start(self):
         assert not self._started
         self._started = True
-        self.agent.engine.profiler.record(self.agent.engine.now(), self.name,
-                                          "campaign:start", {})
+        self.engine.profiler.record(self.engine.now(), self.name,
+                                    "campaign:start", {})
         for name, deps in list(self._waiting.items()):
             if not deps:
                 self._launch_stage(name)
@@ -74,14 +107,50 @@ class Campaign:
         for d in descs:
             d.stage = name
             d.workflow = stage.workflow or name
-        self.agent.engine.profiler.record(
-            self.agent.engine.now(), name, "stage:start",
+            if stage.priority and not d.priority:
+                d.priority = stage.priority
+            if stage.tenant and not d.tenant:
+                d.tenant = stage.tenant
+        if not stage.barrier:
+            self._wire_task_deps(stage, descs)
+        self.engine.profiler.record(
+            self.engine.now(), name, "stage:start",
             {"tasks": len(descs)})
         if not descs:
             self._stage_complete(name)
+            # an empty stage still counts as launched: downstream
+            # barrier-free stages must not silently fall back to waiting
+            # on full completion of their other upstreams
+            self._release_nonbarrier_stages()
             return
         self._stage_pending[name] = len(descs)
-        self.stage_tasks[name] = self.agent.submit(descs)
+        self.stage_tasks[name] = self.target.submit(descs)
+        # stages downstream of this one that opted out of the barrier can
+        # launch now — their tasks hold on per-task `after` dependencies
+        self._release_nonbarrier_stages()
+
+    def _wire_task_deps(self, stage: Stage, descs: List[TaskDescription]):
+        """Default ``after`` wiring for a barrier-free stage: 1:1 against a
+        single same-sized upstream stage (the map-over-upstream pattern),
+        otherwise each task waits on every upstream task. Descriptions
+        with explicit ``after`` keep it."""
+        upstream: List[List[Task]] = [self.stage_tasks.get(dep, [])
+                                      for dep in stage.depends_on]
+        one_to_one = (len(upstream) == 1
+                      and len(upstream[0]) == len(descs))
+        all_uids = tuple(t.uid for ts in upstream for t in ts)
+        for i, d in enumerate(descs):
+            if d.after:
+                continue
+            d.after = ((upstream[0][i].uid,) if one_to_one else all_uids)
+
+    def _release_nonbarrier_stages(self):
+        for other, stage in self.stages.items():
+            if (other in self._launched or stage.barrier
+                    or not all(dep in self._launched
+                               for dep in stage.depends_on)):
+                continue
+            self._launch_stage(other)
 
     def _task_done(self, task: Task):
         stage = task.description.stage
@@ -117,8 +186,8 @@ class Campaign:
         if name in self._done_stages:
             return
         self._done_stages.add(name)
-        self.agent.engine.profiler.record(self.agent.engine.now(), name,
-                                          "stage:done", {})
+        self.engine.profiler.record(self.engine.now(), name,
+                                    "stage:done", {})
         for other, deps in self._waiting.items():
             if name in deps:
                 deps.discard(name)

@@ -146,7 +146,8 @@ class SimLaunchServer:
                  on_release: Optional[Callable[[Task], None]] = None,
                  queue: Optional[Deque[Task]] = None,
                  scan_limit: int = 64,
-                 qstate: Optional[QueueState] = None):
+                 qstate: Optional[QueueState] = None,
+                 gang_reserve: bool = False):
         self.engine = engine
         self.name = name
         self.pool = pool
@@ -159,6 +160,12 @@ class SimLaunchServer:
         self.owns_queue = queue is None
         self.queue: Deque[Task] = deque() if queue is None else queue
         self.scan_limit = scan_limit
+        # conservative backfill for multi-node gangs: a blocked nodes>0 task
+        # claims a draining node set (NodePool.claim) so the backfill stream
+        # behind it cannot starve it; off by default for seed-equivalence
+        self.gang_reserve = gang_reserve
+        self._claim = None
+        self._claim_task: Optional[Task] = None
         self.busy = False
         self.dead = False
         self.running: Dict[str, Task] = {}
@@ -182,9 +189,21 @@ class SimLaunchServer:
         self._qstate.tail += 1
         self.pump()
 
+    def _release_claim(self):
+        if self._claim is not None:
+            self.pool.release_claim(self._claim)
+            self._claim = None
+            self._claim_task = None
+            self._stall_head = None        # pool changed: rescan
+
     def pump(self):
         if self.busy or self.dead:
             return
+        # a sibling server (shared backlog) may have launched — or the agent
+        # canceled — the gang this claim was draining nodes for: release it
+        ct = self._claim_task
+        if ct is not None and ct.state is not TaskState.QUEUED:
+            self._release_claim()
         q = self.queue
         if not q:
             return
@@ -210,18 +229,46 @@ class SimLaunchServer:
         launched = False
         limit = self.scan_limit
         admission = self.admission
-        alloc_fn = self.pool.alloc
+        pool = self.pool
+        alloc_fn = pool.alloc
         while q and scanned < limit and not self.busy:
             task = q.popleft()
             scanned += 1
             if task.state is TaskState.CANCELED:
                 qs.head += 1               # dropped: window shifts for all
+                if task is self._claim_task:
+                    self._release_claim()
                 continue
             if admission is not None and not admission(task):
                 deferred.append(task)
                 continue
+            if task is self._claim_task:
+                # the reserved gang launches atomically once its claimed
+                # node set has drained; until then it parks without blocking
+                # the backfill stream behind it (which can no longer touch
+                # the claimed nodes)
+                if pool.claim_ready(self._claim):
+                    alloc = pool.alloc_claimed(task.description, self._claim)
+                    self._claim = None
+                    self._claim_task = None
+                    qs.head += 1
+                    launched = True
+                    self._launch(task, alloc)
+                else:
+                    deferred.append(task)
+                continue
             alloc = alloc_fn(task.description)
             if alloc is None:
+                d = task.description
+                if (self.gang_reserve and d.nodes and self._claim is None
+                        and d.nodes <= pool.n_nodes):
+                    c = pool.claim(d.nodes)
+                    if c is not None:
+                        self._claim = c
+                        self._claim_task = task
+                        self.engine.profiler.record(
+                            self.engine.now(), task.uid, "gang:reserve",
+                            {"server": self.name, "nodes": d.nodes})
                 deferred.append(task)
                 continue
             qs.head += 1                   # removed: window shifts for all
@@ -365,6 +412,7 @@ class SimLaunchServer:
         (fault isolation, §4.1.3). A shared backlog survives — siblings keep
         draining it."""
         self.dead = True
+        self._release_claim()
         victims = list(self.running.values())
         for t in victims:
             ev = self._completion_events.pop(t.uid, None)

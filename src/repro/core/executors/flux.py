@@ -28,12 +28,13 @@ class SimFluxExecutor(BaseExecutor):
     def __init__(self, engine, n_nodes: int, n_partitions: int = 1,
                  spec: NodeSpec = NodeSpec(cores=CAL.CORES_PER_NODE,
                                            gpus=CAL.GPUS_PER_NODE),
-                 name: str = "flux"):
+                 name: str = "flux", gang_reserve: bool = False):
         super().__init__(name)
         self.engine = engine
         self.n_nodes = n_nodes
         self.n_partitions = min(n_partitions, n_nodes)
         self.spec = spec
+        self.gang_reserve = gang_reserve
         self.instances: List[SimLaunchServer] = []
         self.backlog = deque()               # shared: late binding across instances
         self._qstate = QueueState()          # shared backlog change counters
@@ -46,7 +47,8 @@ class SimFluxExecutor(BaseExecutor):
                 service_time_fn=(lambda r: lambda t: max(
                     engine.noisy(1.0 / r, sigma=CAL.FLUX_RATE_SIGMA),
                     self.coord.reserve()))(rate),
-                queue=self.backlog, qstate=self._qstate)
+                queue=self.backlog, qstate=self._qstate,
+                gang_reserve=gang_reserve)
             inst.on_complete = self._completed
             inst.on_failure = self._failed
             self.instances.append(inst)
@@ -144,7 +146,11 @@ class SimFluxExecutor(BaseExecutor):
                 service_time_fn=lambda t: max(
                     self.engine.noisy(1.0 / rate, sigma=CAL.FLUX_RATE_SIGMA),
                     self.coord.reserve()),
-                queue=self.backlog, qstate=self._qstate)
+                queue=self.backlog, qstate=self._qstate,
+                # inherit the dead server's flag, not the constructor
+                # option: a gated scheduler arms gang_reserve per server
+                # after construction, and failover must not disarm it
+                gang_reserve=old.gang_reserve)
             inst.on_complete = self._completed
             inst.on_failure = self._failed
             self.instances[idx] = inst
@@ -178,5 +184,7 @@ class SimFluxExecutor(BaseExecutor):
 
 
 @register_executor("flux", mode="sim")
-def _build_sim_flux(engine, nodes, spec, partitions=1, **_):
-    return SimFluxExecutor(engine, nodes, partitions, spec)
+def _build_sim_flux(engine, nodes, spec, partitions=1, gang_reserve=False,
+                    **_):
+    return SimFluxExecutor(engine, nodes, partitions, spec,
+                           gang_reserve=gang_reserve)

@@ -23,7 +23,8 @@ class SimSrunExecutor(BaseExecutor):
 
     def __init__(self, engine, n_nodes: int,
                  spec: NodeSpec = NodeSpec(cores=CAL.CORES_PER_NODE,
-                                           gpus=CAL.GPUS_PER_NODE)):
+                                           gpus=CAL.GPUS_PER_NODE),
+                 gang_reserve: bool = False):
         super().__init__("srun")
         self.engine = engine
         self.n_nodes = n_nodes
@@ -34,7 +35,8 @@ class SimSrunExecutor(BaseExecutor):
             service_time_fn=lambda t: engine.noisy(1.0 / rate, sigma=0.2),
             admission=lambda t: engine.srun_slots_free > 0,
             on_admit=lambda t: engine.take_srun_slot(),
-            on_release=lambda t: engine.release_srun_slot())
+            on_release=lambda t: engine.release_srun_slot(),
+            gang_reserve=gang_reserve)
         self.server.on_complete = self._completed
         self.server.on_failure = self._failed
 
@@ -68,5 +70,5 @@ class SimSrunExecutor(BaseExecutor):
 
 
 @register_executor("srun", mode="sim")
-def _build_sim_srun(engine, nodes, spec, **_):
-    return SimSrunExecutor(engine, nodes, spec)
+def _build_sim_srun(engine, nodes, spec, gang_reserve=False, **_):
+    return SimSrunExecutor(engine, nodes, spec, gang_reserve=gang_reserve)

@@ -4,11 +4,17 @@ The same ``NodePool`` serves the simulator (Frontier-like nodes) and real mode
 (host cores / TPU submeshes mapped to abstract nodes). Invariant (tested with
 hypothesis): free counts never go negative and alloc/free round-trips restore
 them exactly — no oversubscription ever.
+
+Gang reservations (``claim``/``claim_ready``/``alloc_claimed``) support
+conservative backfill: a blocked multi-node task claims a set of nodes that
+then stop accepting new allocations and drain toward fully-free, bounding the
+gang's wait by the residual work on the claimed nodes instead of letting a
+stream of small tasks starve it forever.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 from repro.core.task import TaskDescription
 
@@ -30,6 +36,18 @@ class Allocation:
         return sum(self.node_cores.values())
 
 
+class NodeClaim:
+    """A reservation over specific nodes: they accept no new allocations and
+    drain toward fully-free, at which point ``alloc_claimed`` hands the whole
+    set to the claiming gang atomically."""
+
+    __slots__ = ("want", "nodes")
+
+    def __init__(self, want: int, nodes: List[int]):
+        self.want = want
+        self.nodes = nodes
+
+
 class NodePool:
     """First-fit allocator over a contiguous node range."""
 
@@ -42,6 +60,9 @@ class NodePool:
             first_node + i: spec.cores for i in range(n_nodes)}
         self.free_gpus: Dict[int, int] = {
             first_node + i: spec.gpus for i in range(n_nodes)}
+        # nodes held by an active NodeClaim: excluded from every alloc path
+        # until the claim launches (alloc_claimed) or is released
+        self.held: Set[int] = set()
 
     # ------------------------------------------------------------------ alloc
     def can_fit(self, td: TaskDescription) -> bool:
@@ -52,11 +73,13 @@ class NodePool:
 
     def _try_alloc(self, td: TaskDescription, commit: bool
                    ) -> Optional[Allocation]:
+        held = self.held
         if td.nodes:
-            # whole-node co-scheduling
+            # whole-node co-scheduling (claimed nodes are off limits: they
+            # belong to the reservation that is draining them)
             empty = [n for n, c in self.free_cores.items()
                      if c == self.spec.cores and
-                     self.free_gpus[n] == self.spec.gpus]
+                     self.free_gpus[n] == self.spec.gpus and n not in held]
             if len(empty) < td.nodes:
                 return None
             alloc = Allocation()
@@ -73,7 +96,7 @@ class NodePool:
             # first-fit reduces to "first node with a free core"
             free_cores = self.free_cores
             for n, c in free_cores.items():
-                if c > 0:
+                if c > 0 and (not held or n not in held):
                     if commit:
                         free_cores[n] = c - 1
                     return Allocation(node_cores={n: 1})
@@ -84,6 +107,8 @@ class NodePool:
         for n in self.free_cores:
             if need_c <= 0 and need_g <= 0:
                 break
+            if held and n in held:
+                continue
             c = min(self.free_cores[n], need_c)
             g = min(self.free_gpus[n], need_g)
             if td.cores <= self.spec.cores and c < td.cores and c < need_c:
@@ -102,6 +127,46 @@ class NodePool:
         if commit:
             self._commit(alloc)
         return alloc
+
+    # ----------------------------------------------------------- reservations
+    def claim(self, want: int) -> Optional[NodeClaim]:
+        """Reserve ``want`` nodes for a blocked gang: prefer nodes that are
+        already (or nearly) drained so the reservation becomes launchable as
+        fast as possible. Claimed nodes accept no new allocations. Returns
+        None when fewer than ``want`` unclaimed nodes exist at all."""
+        held = self.held
+        candidates = [n for n in self.free_cores if n not in held]
+        if len(candidates) < want:
+            return None
+        candidates.sort(key=lambda n: (-self.free_cores[n],
+                                       -self.free_gpus[n], n))
+        nodes = candidates[:want]
+        held.update(nodes)
+        return NodeClaim(want, nodes)
+
+    def claim_ready(self, c: NodeClaim) -> bool:
+        """True once every claimed node has fully drained."""
+        cores, gpus = self.spec.cores, self.spec.gpus
+        return all(self.free_cores[n] == cores and self.free_gpus[n] == gpus
+                   for n in c.nodes)
+
+    def alloc_claimed(self, td: TaskDescription, c: NodeClaim
+                      ) -> Allocation:
+        """Atomically hand the claimed node set to the gang (the claim must
+        be ready). Releases the hold as part of the allocation."""
+        assert td.nodes <= c.want and self.claim_ready(c), "claim not ready"
+        alloc = Allocation()
+        for n in sorted(c.nodes)[: td.nodes]:
+            alloc.node_cores[n] = self.spec.cores
+            alloc.node_gpus[n] = self.spec.gpus
+        self.held.difference_update(c.nodes)
+        c.nodes = []
+        self._commit(alloc)
+        return alloc
+
+    def release_claim(self, c: NodeClaim):
+        self.held.difference_update(c.nodes)
+        c.nodes = []
 
     def _commit(self, alloc: Allocation):
         for n, c in alloc.node_cores.items():
@@ -127,6 +192,15 @@ class NodePool:
     @property
     def total_gpus(self) -> int:
         return self.n_nodes * self.spec.gpus
+
+    @property
+    def free_whole_nodes(self) -> int:
+        """Fully-free, unclaimed nodes — the gang-placement probe."""
+        held = self.held
+        cores, gpus = self.spec.cores, self.spec.gpus
+        return sum(1 for n, c in self.free_cores.items()
+                   if c == cores and self.free_gpus[n] == gpus
+                   and n not in held)
 
     @property
     def used_cores(self) -> int:

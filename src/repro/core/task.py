@@ -74,7 +74,7 @@ def new_uid(prefix: str = "task") -> str:
     return "%s.%06d" % (prefix, next(_uid_counter))
 
 
-@dataclass(init=False)
+@dataclass(init=False, slots=True)
 class TaskDescription:
     uid: str = ""
     kind: str = "executable"            # executable | function | service
@@ -98,6 +98,13 @@ class TaskDescription:
     restarted_from: Optional[str] = None  # restart lineage: uid of the failed
                                           # replica this description replaces
                                           # (chains across generations)
+    # campaign-scheduler fields (repro.sched): ordering class, fair-share
+    # tenant/weight, and per-task upstream dependencies (uids) released by
+    # the scheduler as the upstreams reach a terminal state
+    priority: int = 0
+    tenant: str = ""
+    share: float = 1.0
+    after: Tuple[str, ...] = ()
 
     # hand-written __init__ (same signature/defaults as the generated one,
     # __post_init__ folded in): descriptions are created once per task, so
@@ -110,7 +117,9 @@ class TaskDescription:
                  coupling: str = "loose", backend: Optional[str] = None,
                  stage: str = "", workflow: str = "", max_retries: int = 0,
                  service: Optional[Any] = None,
-                 restarted_from: Optional[str] = None):
+                 restarted_from: Optional[str] = None,
+                 priority: int = 0, tenant: str = "", share: float = 1.0,
+                 after: Tuple[str, ...] = ()):
         self.uid = uid or new_uid()
         self.kind = kind
         self.cores = cores
@@ -129,6 +138,10 @@ class TaskDescription:
         self.max_retries = max_retries
         self.service = service
         self.restarted_from = restarted_from
+        self.priority = priority
+        self.tenant = tenant
+        self.share = share
+        self.after = after
 
 
 class InvalidTransition(RuntimeError):

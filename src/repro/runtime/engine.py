@@ -72,6 +72,13 @@ class Engine(ABC):
     def schedule(self, delay: float, fn: Callable, *args):
         """Run ``fn(*args)`` after ``delay`` engine-seconds."""
 
+    def call_soon(self, fn: Callable, *args):
+        """Run ``fn(*args)`` as soon as the engine is idle: after the
+        current event on the sim engine (same virtual time, deterministic
+        order), on a prompt timer on the real engine. The campaign
+        scheduler coalesces its placement passes through this."""
+        return self.schedule(0.0, fn, *args)
+
     @abstractmethod
     def drain(self, predicate: Optional[Callable[[], bool]] = None,
               timeout: Optional[float] = None,

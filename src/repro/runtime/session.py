@@ -142,20 +142,38 @@ class PilotManager:
 
 
 class TaskManager:
-    """Routes task submissions to pilot agents (RP's task-manager bulk
-    path: one locked bulk submit per call) and waits on completion."""
+    """Routes task submissions to pilot agents through a campaign
+    scheduler (repro.sched) and waits on completion. The default scheduler
+    is FIFO passthrough — seed-equivalent least-loaded-pilot bulk
+    submission — while ``scheduler=CampaignScheduler(policy=...)`` turns
+    on hierarchical scheduling (priority/fair-share ordering, placement
+    admission, backfill, gang reservations) for everything this manager
+    submits: executables, gangs, funcpool functions, and service
+    replicas."""
 
-    def __init__(self, session: Session, uid: str = ""):
+    def __init__(self, session: Session, uid: str = "",
+                 scheduler=None):
         self.session = session
         self.uid = uid or new_uid("tmgr")
         self._pilots: List[Pilot] = []
         self.tasks: Dict[str, Task] = {}
+        self._scheduler = scheduler
         session._tmgrs.append(self)
+
+    @property
+    def scheduler(self):
+        """The campaign scheduler every submission routes through (built
+        lazily as FIFO passthrough unless one was injected)."""
+        if self._scheduler is None:
+            from repro.sched import CampaignScheduler
+            self._scheduler = CampaignScheduler()
+        return self._scheduler
 
     def add_pilots(self, pilots: Union[Pilot, Sequence[Pilot]]):
         for p in ([pilots] if isinstance(pilots, Pilot) else list(pilots)):
             if p not in self._pilots:
                 self._pilots.append(p)
+                self.scheduler.add_pilot(p)
 
     @property
     def agent(self):
@@ -175,13 +193,10 @@ class TaskManager:
                                f"is closed")
         if not self._pilots:
             raise RuntimeError(f"{self.uid}: no pilots added")
-        # least-loaded pilot takes the whole bulk (late binding happens
-        # inside the agent; cross-pilot balancing stays coarse-grained);
-        # the lock keeps the load read consistent with timer-thread
-        # mutations of agent counters on the real engine
-        with self.session.engine.lock:
-            pilot = min(self._pilots, key=lambda p: p.agent.n_unfinished)
-            tasks = pilot.agent.submit(descs)
+        # the scheduler owns pilot choice: FIFO passthrough reproduces the
+        # seed least-loaded bulk path; gated policies hold tasks in their
+        # queue and release on placement (engine.lock is taken inside)
+        tasks = self.scheduler.submit(descs)
         for t in tasks:
             self.tasks[t.uid] = t
         return tasks[0] if single else tasks
@@ -210,7 +225,8 @@ class TaskManager:
                       cores=cores, gpus=gpus, nodes=nodes, startup=startup,
                       rate=rate, balancer=balancer, backend=backend,
                       name=name, workflow=workflow, max_retries=max_retries,
-                      restart=restart, scale=scale)
+                      restart=restart, scale=scale,
+                      submitter=self.scheduler)
         self.submit_tasks(svc.descriptions())
         return svc
 
@@ -241,15 +257,16 @@ class TaskManager:
 
     def run_campaign(self, stages, name: str = "campaign",
                      timeout: Optional[float] = None):
-        """Convenience: run a Campaign over this manager's single pilot and
-        block until it completes. Returns the Campaign."""
+        """Convenience: run a Campaign through this manager's scheduler
+        (stage priorities/tenants and ``barrier=False`` per-task release
+        apply) and block until it completes. Returns the Campaign."""
         from repro.core.campaign import Campaign
 
-        camp = Campaign(self.agent, stages, name=name)
-        agent = self.agent
+        sched = self.scheduler
+        camp = Campaign(sched, stages, name=name)
         with self.session.engine.lock:
             camp.start()
         self.session.engine.drain(
-            lambda: agent.n_unfinished == 0 and camp.complete,
+            lambda: sched.n_unfinished == 0 and camp.complete,
             timeout=timeout)
         return camp

@@ -1,0 +1,16 @@
+"""repro.sched — hierarchical campaign scheduling above the pilot layer.
+
+Public surface:
+
+* :class:`CampaignScheduler` — ordering + admission + gang placement across
+  pilots (see ``scheduler.py`` module docs for the architecture).
+* Policies: :class:`FIFOPolicy` (seed-equivalent), :class:`PriorityPolicy`
+  (classes + aging), :class:`FairSharePolicy` (weighted tenants);
+  :func:`make_policy` resolves names.
+"""
+from repro.sched.policy import (FairSharePolicy, FIFOPolicy, PriorityPolicy,
+                                QueuePolicy, make_policy)
+from repro.sched.scheduler import CampaignScheduler
+
+__all__ = ["CampaignScheduler", "QueuePolicy", "FIFOPolicy",
+           "PriorityPolicy", "FairSharePolicy", "make_policy"]

@@ -1,0 +1,226 @@
+"""Queue-ordering policies for the campaign scheduler.
+
+A policy owns the *order* in which admitted work is considered for release;
+placement (does it fit, which pilot) is the scheduler's job. Three built-ins
+mirror the knobs batch systems expose above a pilot layer:
+
+* :class:`FIFOPolicy` — submission order (the seed-equivalent baseline).
+* :class:`PriorityPolicy` — integer priority classes with linear aging, so a
+  starved low class eventually overtakes a stream of fresh high-priority
+  arrivals (effective priority = class + aging_rate * wait).
+* :class:`FairSharePolicy` — weighted fair share across tenants: the tenant
+  with the lowest served-work / weight ratio goes next, where served work is
+  charged on actual release (core-seconds for timed tasks, cores otherwise).
+
+Policies only see :class:`_Entry` handles (task + arrival metadata); they
+never touch resources, engines, or profilers, so they are trivially
+deterministic and engine-agnostic.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+from repro.core import calibration as CAL
+from repro.core.task import Task
+
+
+class _Entry:
+    """One scheduler queue entry: the held task plus arrival metadata."""
+
+    __slots__ = ("task", "seq", "t_submit", "deps", "origin", "resubmit",
+                 "cost", "claim", "claim_view", "held_recorded")
+
+    def __init__(self, task: Task, seq: int, t_submit: float,
+                 origin: str = "", resubmit: bool = False):
+        self.task = task
+        self.seq = seq
+        self.t_submit = t_submit
+        self.deps: Optional[set] = None      # unresolved upstream uids
+        self.origin = origin
+        self.resubmit = resubmit
+        d = task.description
+        # fair-share work estimate: core-seconds when a duration is known,
+        # plain width otherwise (gangs charge their whole-node footprint)
+        width = d.nodes * CAL.CORES_PER_NODE if d.nodes else max(1, d.cores)
+        self.cost = width * (d.duration if d.duration > 0 else 1.0)
+        self.claim = None                    # view-pool NodeClaim (gangs)
+        self.claim_view = None
+        self.held_recorded = False
+
+    @property
+    def priority(self) -> int:
+        return self.task.description.priority
+
+    @property
+    def tenant(self) -> str:
+        return self.task.description.tenant
+
+    @property
+    def share(self) -> float:
+        return self.task.description.share
+
+
+class QueuePolicy:
+    """Ordering-policy interface: push entries, pop the next candidate,
+    requeue the ones the placement pass could not release (order
+    preserved), and charge served work on actual release."""
+
+    name = "fifo"
+
+    def push(self, entry: _Entry) -> None:
+        raise NotImplementedError
+
+    def pop(self, now: float) -> Optional[_Entry]:
+        raise NotImplementedError
+
+    def requeue(self, entries: List[_Entry]) -> None:
+        raise NotImplementedError
+
+    def charge(self, entry: _Entry) -> None:
+        """Account released work (fair-share bookkeeping hook)."""
+
+    def __len__(self) -> int:
+        raise NotImplementedError
+
+
+class FIFOPolicy(QueuePolicy):
+    """Strict submission order — with admission disabled this reproduces the
+    seed TaskManager path exactly."""
+
+    name = "fifo"
+
+    def __init__(self):
+        self._q: Deque[_Entry] = deque()
+
+    def push(self, entry: _Entry) -> None:
+        self._q.append(entry)
+
+    def pop(self, now: float) -> Optional[_Entry]:
+        return self._q.popleft() if self._q else None
+
+    def requeue(self, entries: List[_Entry]) -> None:
+        self._q.extendleft(reversed(entries))
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+class PriorityPolicy(QueuePolicy):
+    """Priority classes with linear aging. Each class is FIFO internally;
+    the head with the highest effective priority (class + aging_rate *
+    wait) pops next, ties broken by arrival order. O(#classes) per pop."""
+
+    name = "priority"
+
+    def __init__(self, aging_rate: float = 0.0):
+        self.aging_rate = aging_rate
+        self._classes: Dict[int, Deque[_Entry]] = {}
+        self._n = 0
+
+    def push(self, entry: _Entry) -> None:
+        q = self._classes.get(entry.priority)
+        if q is None:
+            q = self._classes[entry.priority] = deque()
+        q.append(entry)
+        self._n += 1
+
+    def pop(self, now: float) -> Optional[_Entry]:
+        best_q = None
+        best_key = None
+        rate = self.aging_rate
+        for prio, q in self._classes.items():
+            if not q:
+                continue
+            head = q[0]
+            key = (prio + rate * (now - head.t_submit), -head.seq)
+            if best_key is None or key > best_key:
+                best_key = key
+                best_q = q
+        if best_q is None:
+            return None
+        self._n -= 1
+        return best_q.popleft()
+
+    def requeue(self, entries: List[_Entry]) -> None:
+        classes = self._classes
+        for e in reversed(entries):
+            classes[e.priority].appendleft(e)
+        self._n += len(entries)
+
+    def __len__(self) -> int:
+        return self._n
+
+
+class FairSharePolicy(QueuePolicy):
+    """Weighted fair share across tenants (``TaskDescription.tenant`` /
+    ``share``): pop from the pending tenant with the smallest
+    served-work/weight ratio; served work is charged when the scheduler
+    actually releases the entry, so blocked-and-requeued candidates are not
+    billed. O(#tenants) per pop."""
+
+    name = "fair"
+
+    def __init__(self):
+        self._tenants: Dict[str, Deque[_Entry]] = {}
+        self._served: Dict[str, float] = {}
+        self._weights: Dict[str, float] = {}
+        self._n = 0
+
+    def push(self, entry: _Entry) -> None:
+        t = entry.tenant
+        q = self._tenants.get(t)
+        if q is None:
+            q = self._tenants[t] = deque()
+            self._served.setdefault(t, 0.0)
+        self._weights[t] = max(entry.share, 1e-9)
+        q.append(entry)
+        self._n += 1
+
+    def pop(self, now: float) -> Optional[_Entry]:
+        best_t = None
+        best_key = None
+        for t, q in self._tenants.items():
+            if not q:
+                continue
+            key = (self._served[t] / self._weights[t], q[0].seq)
+            if best_key is None or key < best_key:
+                best_key = key
+                best_t = t
+        if best_t is None:
+            return None
+        self._n -= 1
+        return self._tenants[best_t].popleft()
+
+    def requeue(self, entries: List[_Entry]) -> None:
+        tenants = self._tenants
+        for e in reversed(entries):
+            tenants[e.tenant].appendleft(e)
+        self._n += len(entries)
+
+    def charge(self, entry: _Entry) -> None:
+        self._served[entry.tenant] = (self._served.get(entry.tenant, 0.0)
+                                      + entry.cost)
+
+    def served(self) -> Dict[str, float]:
+        """Served work per tenant (inspection/metrics)."""
+        return dict(self._served)
+
+    def __len__(self) -> int:
+        return self._n
+
+
+_BUILTIN = {"fifo": FIFOPolicy, "priority": PriorityPolicy,
+            "fair": FairSharePolicy}
+
+
+def make_policy(spec) -> QueuePolicy:
+    """Resolve a policy spec: an instance passes through, a name builds the
+    matching built-in with defaults."""
+    if isinstance(spec, QueuePolicy):
+        return spec
+    try:
+        return _BUILTIN[spec]()
+    except KeyError:
+        raise KeyError(f"unknown scheduling policy {spec!r} "
+                       f"(known: {sorted(_BUILTIN)})") from None

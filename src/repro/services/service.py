@@ -189,9 +189,15 @@ class Service:
                  backend: Optional[str] = None, name: str = "",
                  workflow: str = "", max_retries: int = 2,
                  restart: Optional[RestartPolicy] = None,
-                 scale: Optional[ScalePolicy] = None):
+                 scale: Optional[ScalePolicy] = None,
+                 submitter=None):
         assert replicas >= 1
         self.agent = agent
+        # replica placement authority: restart replacements and scale-up
+        # provisions resubmit through this (a repro.sched.CampaignScheduler
+        # routes/charges them against its placement views; default: the
+        # agent's dispatch pipeline directly)
+        self.submitter = submitter if submitter is not None else agent
         self.engine = agent.engine
         self.handler = handler
         self.n_replicas = replicas          # the *target* live-replica count
@@ -271,8 +277,9 @@ class Service:
         return d
 
     def submit(self) -> List[Task]:
-        """Convenience: submit the replica tasks through the agent."""
-        return self.agent.submit(self.descriptions())
+        """Convenience: submit the replica tasks through the placement
+        authority (the campaign scheduler when one was configured)."""
+        return self.submitter.submit(self.descriptions())
 
     # executor callbacks ------------------------------------------------
     def _attach_replica(self, task: Task) -> Replica:
@@ -396,7 +403,7 @@ class Service:
                 self._check_stopped()
                 return
             desc = self._new_desc(restarted_from=failed_uid)
-            self.agent.resubmit([desc], origin=failed_uid)
+            self.submitter.resubmit([desc], origin=failed_uid)
 
     def _recover_replica_requests(self, r: Replica, task: Task):
         """Requests still queued or in flight on a FAILED/CANCELED replica
@@ -520,7 +527,7 @@ class Service:
             desc = self._new_desc()
             self.engine.profiler.record(now, self.name, "service:scale_up",
                                         {"target": self.n_replicas})
-            self.agent.resubmit([desc], origin="scale-up")
+            self.submitter.resubmit([desc], origin="scale-up")
         elif (not self._stopping and per_replica < sp.down_threshold
                 and len(live) > 1 and target > max(1, sp.min_replicas)):
             idle = [r for r in live if r.outstanding == 0]
