@@ -11,7 +11,7 @@ without itself becoming the bottleneck.
 
 Usage:
     PYTHONPATH=src python benchmarks/throughput_scale.py            # 10k/100k/1M
-    PYTHONPATH=src python benchmarks/throughput_scale.py --quick    # 10k only
+    PYTHONPATH=src python benchmarks/throughput_scale.py --quick    # CI: 10k + 1M gate
     PYTHONPATH=src python benchmarks/throughput_scale.py --scales 100000
 """
 from __future__ import annotations
@@ -23,7 +23,8 @@ import sys
 import time
 from typing import Dict, List
 
-from repro.core.analytics import compute_metrics, concurrency_series
+from repro.core.analytics import (compute_metrics, concurrency_series,
+                                  occupancy_utilization)
 from repro.core.pilot import PilotDescription
 from repro.core.task import TaskDescription
 from repro.runtime import PilotManager, Session, TaskManager
@@ -39,30 +40,45 @@ def _peak_rss_mb() -> float:
 
 def run_campaign(n_tasks: int, hybrid: bool, seed: int = 0) -> Dict:
     """One end-to-end Fig-5-style run: build descriptions, submit through
-    the Session facade, drain, compute metrics. Returns the measurement."""
+    the Session facade, drain, compute metrics. Returns the measurement.
+
+    At >=2M tasks the non-hybrid config switches to the wave API
+    (``submit_wave``): one shared template plus a reserved uid block, so
+    the 10M-task tier does not spend gigabytes on description objects."""
     t0 = time.time()
     if hybrid:
         # Fig 5d: mixed executable+function load over flux+dragon
         backends = {"flux": {"partitions": 8, "nodes": NODES // 2},
                     "dragon": {"partitions": 8, "nodes": NODES // 2}}
-        descs = [TaskDescription(cores=1, duration=0.0,
-                                 kind="function" if i % 2 else "executable")
-                 for i in range(n_tasks)]
     else:
         backends = {"flux": {"partitions": 8}}
-        descs = [TaskDescription(cores=1, duration=0.0)
-                 for _ in range(n_tasks)]
     with Session(mode="sim", seed=seed) as session:
         pilot = PilotManager(session).submit_pilots(
             PilotDescription(nodes=NODES, backends=backends))
         tmgr = TaskManager(session)
         tmgr.add_pilots(pilot)
-        tmgr.submit_tasks(descs)
+        if not hybrid and n_tasks >= 2_000_000:
+            tmgr.submit_wave(TaskDescription(cores=1, duration=0.0), n_tasks)
+        else:
+            if hybrid:
+                descs = [TaskDescription(cores=1, duration=0.0,
+                                         kind="function" if i % 2
+                                         else "executable")
+                         for i in range(n_tasks)]
+            else:
+                descs = [TaskDescription(cores=1, duration=0.0)
+                         for _ in range(n_tasks)]
+            tmgr.submit_tasks(descs)
         tmgr.wait_tasks()
         agent = pilot.agent
         engine = session.engine
-        m = compute_metrics(list(agent.tasks.values()), agent.total_cores)
-        series = concurrency_series(list(agent.tasks.values()))
+        tasks = agent.all_tasks()
+        m = compute_metrics(tasks, agent.total_cores)
+        series = concurrency_series(tasks)
+        # null tasks have zero execution time, so the §4 RUNNING->DONE
+        # utilization is degenerately 0; report allocation occupancy
+        # (LAUNCHING->DONE), which the launch pipeline actually sustains
+        occ = occupancy_utilization(tasks, agent.total_cores)
         wall = time.time() - t0
         return {
             "config": "flux+dragon hybrid" if hybrid else "flux x8",
@@ -74,7 +90,7 @@ def run_campaign(n_tasks: int, hybrid: bool, seed: int = 0) -> Dict:
             "trace_events": len(session.profiler),
             "peak_rss_mb": round(_peak_rss_mb(), 1),
             "sim_throughput_avg": round(m.throughput_avg, 1),
-            "sim_utilization": round(m.utilization, 4),
+            "sim_utilization": round(occ, 4),
             "concurrency_samples": len(series),
         }
 
@@ -82,20 +98,59 @@ def run_campaign(n_tasks: int, hybrid: bool, seed: int = 0) -> Dict:
 def main(argv: List[str] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
-                    help="10k-task smoke run only (CI)")
+                    help="CI tier: 10k smoke + the 1M regression gate "
+                         "(affordable now that waves take the cohort path)")
     ap.add_argument("--scales", type=int, nargs="+", default=None,
                     help="explicit task counts")
     ap.add_argument("--hybrid", action="store_true",
                     help="flux+dragon mixed-modality config (Fig 5d)")
+    ap.add_argument("--tasks", type=int, default=None,
+                    help="single explicit scale (e.g. --tasks 10000000 for "
+                         "the slow memory tier)")
+    ap.add_argument("--max-rss-mb", type=float, default=4096.0,
+                    help="fail if peak RSS exceeds this (slow-tier gate)")
+    ap.add_argument("--no-regress-check", action="store_true",
+                    help="skip the wall-time comparison against the "
+                         "committed baseline in --output")
     ap.add_argument("--output", default="BENCH_runtime.json")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    scales = (args.scales if args.scales
-              else ((10_000,) if args.quick else DEFAULT_SCALES))
+    scales = ((args.tasks,) if args.tasks
+              else args.scales if args.scales
+              else ((10_000, 1_000_000) if args.quick else DEFAULT_SCALES))
+    # the committed results are the regression baseline: read them before
+    # overwriting, keep them as *_prev columns in the new payload
+    baseline: Dict = {}
+    try:
+        with open(args.output) as f:
+            for b in json.load(f).get("results", []):
+                baseline[(b["config"], b["n_tasks"])] = b
+    except (OSError, ValueError, KeyError):
+        pass
+    failures: List[str] = []
     results = []
     for n in scales:
         r = run_campaign(n, hybrid=args.hybrid, seed=args.seed)
+        prev = baseline.get((r["config"], r["n_tasks"]))
+        if prev is not None:
+            for k in ("wall_s", "tasks_per_s", "peak_rss_mb",
+                      "sim_events_per_s"):
+                if k in prev:
+                    r[k + "_prev"] = prev[k]
+            # enforce only at >=1M, where the cohort-path wall is long
+            # enough (~6s) for a 10% band to mean something; smaller
+            # tiers are sub-second and noise-dominated but still report
+            # their *_prev columns
+            if (not args.no_regress_check and n >= 1_000_000
+                    and r["wall_s"] > 1.10 * prev["wall_s"]):
+                failures.append(
+                    f"wall-time regression at n={n:,}: {r['wall_s']:.2f}s "
+                    f"vs baseline {prev['wall_s']:.2f}s (>10%)")
+        if r["peak_rss_mb"] > args.max_rss_mb:
+            failures.append(
+                f"peak RSS {r['peak_rss_mb']:.0f}MB exceeds "
+                f"{args.max_rss_mb:.0f}MB at n={n:,}")
         results.append(r)
         print(f"{r['config']:>20}  n={n:>9,}  wall={r['wall_s']:>8.2f}s  "
               f"tasks/s={r['tasks_per_s']:>7,}  "
@@ -115,6 +170,10 @@ def main(argv: List[str] = None) -> int:
     with open(args.output, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {args.output}")
+    if failures:
+        for msg in failures:
+            print(f"FAIL: {msg}", file=sys.stderr)
+        return 1
     return 0
 
 

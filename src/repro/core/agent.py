@@ -17,11 +17,14 @@ O(1/batch) events per task on dispatch.
 """
 from __future__ import annotations
 
+import dataclasses
 import gc
+import os
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.core import calibration as CAL
+from repro.core import cohort as _cohort
 from repro.core.executors.base import BaseExecutor
 from repro.core.resources import NodeSpec
 from repro.core.task import Task, TaskDescription, TaskState
@@ -158,7 +161,9 @@ class Agent:
                  speculation: bool = False,
                  speculation_factor: float = 3.0,
                  speculation_quantile: float = 0.95,
-                 speculation_min_samples: int = 10):
+                 speculation_min_samples: int = 10,
+                 cohort: bool = True,
+                 cohort_min: int = 50_000):
         self.engine = engine
         self.n_nodes = n_nodes
         self.node_spec = node_spec
@@ -169,6 +174,15 @@ class Agent:
         self.speculation_factor = speculation_factor
         self.speculation_quantile = speculation_quantile
         self.speculation_min_samples = max(1, speculation_min_samples)
+
+        # cohort fast path (repro.core.cohort): eligible homogeneous bulks
+        # of >= cohort_min tasks are planned closed-form instead of running
+        # the object state machine; REPRO_COHORT=0 force-disables globally
+        self._cohort = cohort and os.environ.get("REPRO_COHORT", "1") != "0"
+        self._cohort_min = max(1, cohort_min)
+        self.cohorts: List[Any] = []      # planned TaskCohort columns
+        self._cohort_n = 0                # members across all cohorts
+        self._cohort_done = 0             # terminal members (event-advanced)
 
         self.tasks: Dict[str, Task] = {}
         self._dispatch_q: deque = deque()
@@ -182,6 +196,10 @@ class Agent:
         # listeners (campaigns, service readiness watchers, ...)
         self.on_task_done: Optional[Callable[[Task], None]] = None
         self._done_callbacks: List[Callable[[Task], None]] = []
+        # parallel to _done_callbacks: each entry is a zero-arg probe
+        # declaring the callback safe to skip for cohort members (or None
+        # = never safe, which disables the cohort path while registered)
+        self._cb_cohort_safe: List[Optional[Callable[[], bool]]] = []
         self._spec_watch: Dict[str, Any] = {}
         self._spec_clones: Dict[str, Task] = {}
         # duration-free speculation (ROADMAP: RealEngine stragglers): the
@@ -233,7 +251,21 @@ class Agent:
         self.ready_at = max(ex.ready_at for ex in self.backends.values())
 
     # ---------------------------------------------------------------- submit
-    def submit(self, descriptions: List[TaskDescription]) -> List[Task]:
+    def submit(self, descriptions: List[TaskDescription],
+               cohort: Optional[bool] = None):
+        """Submit a bulk of task descriptions. Returns a list of ``Task``
+        objects — or, when the bulk is large and homogeneous enough for the
+        vectorized cohort path (see ``repro.core.cohort``), a
+        :class:`repro.core.task.CohortWave` (same iteration surface, lazy
+        per-task views). ``cohort=False`` forces the object path for this
+        call."""
+        use_cohort = self._cohort if cohort is None else (self._cohort
+                                                          and cohort)
+        if use_cohort and len(descriptions) >= self._cohort_min:
+            with self.engine.lock:
+                wave = _cohort.try_plan(self, descriptions)
+            if wave is not None:
+                return wave
         out = []
         engine = self.engine
         with engine.lock:
@@ -286,6 +318,20 @@ class Agent:
                     gc.enable()
         return prepared
 
+    def submit_wave(self, template: TaskDescription, n: int):
+        """Submit ``n`` clones of ``template`` without materializing ``n``
+        descriptions: the cohort planner shares the template and reserves a
+        uid block, so per-task submit cost is O(1) memory. Falls back to
+        materialized descriptions on the object path when the wave is not
+        cohort-eligible. Returns a ``CohortWave`` or a list of tasks."""
+        if self._cohort:
+            with self.engine.lock:
+                wave = _cohort.try_plan_wave(self, template, n)
+            if wave is not None:
+                return wave
+        descs = [dataclasses.replace(template, uid="") for _ in range(n)]
+        return self.submit(descs, cohort=False)
+
     def resubmit(self, descriptions: List[TaskDescription],
                  origin: str = "") -> List[Task]:
         """Resubmission hook for the service fault model: replica restarts
@@ -294,7 +340,7 @@ class Agent:
         submission), with an ``agent:resubmit`` trace event carrying the
         lineage so recovery overhead is measurable per the RP
         characterization protocol."""
-        tasks = self.submit(descriptions)
+        tasks = self.submit(descriptions, cohort=False)
         self._record_resubmit(tasks, origin)
         return tasks
 
@@ -456,11 +502,45 @@ class Agent:
         if self.on_task_done:
             self.on_task_done(task)
 
-    def add_done_callback(self, cb: Callable[[Task], None]):
+    def add_done_callback(self, cb: Callable[[Task], None],
+                          cohort_safe: Optional[Callable[[], bool]] = None):
         """Register a terminal-state listener; all registered callbacks run
         (in registration order) plus the legacy ``on_task_done`` slot, so
-        campaigns and service watchers compose instead of clobbering."""
+        campaigns and service watchers compose instead of clobbering.
+
+        Cohort members never invoke per-task callbacks, so any registered
+        callback disables the cohort fast path — unless it declares a
+        ``cohort_safe`` probe returning True when skipping it for a planned
+        wave is currently semantics-preserving (e.g. the FIFO passthrough
+        scheduler when it holds no admission/dependency state)."""
         self._done_callbacks.append(cb)
+        self._cb_cohort_safe.append(cohort_safe)
+
+    # --------------------------------------------------------------- cohorts
+    def _release_cohort_dispatch(self):
+        """Planned dispatch window over: reopen the pipeline for object-path
+        submissions that queued behind the wave."""
+        self._dispatch_busy = False
+        self._pump_dispatch()
+
+    def _cohort_chunk_done(self, cohort, ex: BaseExecutor, k: int,
+                           final: bool):
+        """Bucketed completion accounting for a planned cohort: one event
+        advances ``k`` members to terminal (vs one event per task on the
+        object path)."""
+        cohort.n_terminal += k
+        self._cohort_done += k
+        ex.stats["completed"] += k
+        if final:
+            cohort.finalized = True
+
+    def all_tasks(self) -> List[Any]:
+        """Everything submitted, for analytics: object ``Task`` instances
+        plus planned ``TaskCohort`` columns (``repro.core.analytics``
+        consumes both)."""
+        out: List[Any] = list(self.tasks.values())
+        out.extend(self.cohorts)
+        return out
 
     # ----------------------------------------------------------- speculation
     def _quantile_deadline(self) -> Optional[float]:
@@ -527,21 +607,24 @@ class Agent:
     @property
     def n_unfinished(self) -> int:
         """Tasks not yet in a terminal state — O(1) via the terminal
-        counter (the drain predicate runs once per engine wakeup)."""
-        return len(self.tasks) - self._n_terminal
+        counters (the drain predicate runs once per engine wakeup)."""
+        return (len(self.tasks) + self._cohort_n
+                - self._n_terminal - self._cohort_done)
 
     def run_until_complete(self, max_events: int = 50_000_000,
                            timeout: Optional[float] = None) -> float:
-        # O(1) predicate via the terminal counter (the old per-wakeup task
+        # O(1) predicate via the terminal counters (the old per-wakeup task
         # list-scan made real-engine drains O(n^2) end-to-end)
-        self.engine.drain(lambda: self._n_terminal >= len(self.tasks),
+        self.engine.drain(lambda: (self._n_terminal >= len(self.tasks)
+                                   and self._cohort_done >= self._cohort_n),
                           timeout=timeout, max_events=max_events)
         with self.engine.lock:
             unfinished = self._unfinished()
-        if unfinished:
+            stuck_cohorts = [c for c in self.cohorts if not c.finalized]
+        if unfinished or stuck_cohorts:
             raise RuntimeError(
-                f"run drained with {len(unfinished)} unfinished tasks "
-                f"(first: {unfinished[0]})")
+                f"run drained with {len(unfinished)} unfinished tasks and "
+                f"{len(stuck_cohorts)} unfinalized cohorts")
         return self.engine.now()
 
     @property

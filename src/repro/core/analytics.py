@@ -21,7 +21,25 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.calibration import CORES_PER_NODE
-from repro.core.task import Task, TaskState
+from repro.core.task import CohortWave, Task, TaskCohort, TaskState
+
+
+def _split_cohorts(tasks: Sequence) -> tuple:
+    """Partition an analytics input into object tasks and TaskCohort
+    columns (CohortWaves unpack to their groups). Anything task-shaped
+    stays in the object list."""
+    objs: List[Task] = []
+    cohorts: List[TaskCohort] = []
+    for item in tasks:
+        if isinstance(item, Task):
+            objs.append(item)
+        elif isinstance(item, TaskCohort):
+            cohorts.append(item)
+        elif isinstance(item, CohortWave):
+            cohorts.extend(item.cohorts)
+        else:
+            objs.append(item)
+    return objs, cohorts
 
 
 @dataclass
@@ -52,12 +70,14 @@ def compute_metrics(tasks: Sequence[Task], total_cores: int,
     be the worker count, busy-time is charged one worker per task, and the
     makespan extends to the last *terminal* event (failures included)."""
     real = mode == "real"
+    objs, cohorts = _split_cohorts(tasks)
+    n_total = len(objs) + sum(c.n for c in cohorts)
     n_failed = 0
     term_end = 0.0
     starts_raw: List[float] = []
     ends_raw: List[float] = []
     cores_raw: List[int] = []
-    for t in tasks:                       # single pass: extract columns
+    for t in objs:                        # single pass: extract columns
         state = t.state
         if state is TaskState.DONE:
             ts = t.timestamps
@@ -75,17 +95,39 @@ def compute_metrics(tasks: Sequence[Task], total_cores: int,
                 term_end = max(term_end, t.timestamps.get("FAILED", 0.0))
         elif real and state in (TaskState.STOPPED, TaskState.CANCELED):
             term_end = max(term_end, t.timestamps.get(state.value, 0.0))
-    n_done = len(starts_raw)
+    # cohort columns feed in directly: members never fail, and their
+    # completion times are fully determined at plan time
+    starts_arrays = ([np.asarray(starts_raw)] if starts_raw else [])
+    ends_arrays = ([np.asarray(ends_raw)] if ends_raw else [])
+    cores_arrays = ([np.asarray(cores_raw)] if cores_raw else [])
+    for c in cohorts:
+        if c.run_t is None:
+            continue
+        starts_arrays.append(c.run_t)
+        ends_arrays.append(c.done_t)
+        cores_arrays.append(np.full(c.n, 1 if real else c.cores_per_task(),
+                                    dtype=np.int64))
+    n_done = sum(len(a) for a in starts_arrays)
     if not n_done:
-        return RunMetrics(len(tasks), 0, n_failed, 0.0, 0.0, 0.0, 0.0,
+        return RunMetrics(n_total, 0, n_failed, 0.0, 0.0, 0.0, 0.0,
                           0.0, 0)
 
-    starts_unsorted = np.asarray(starts_raw)
-    ends = np.asarray(ends_raw)
+    starts_unsorted = (starts_arrays[0] if len(starts_arrays) == 1
+                       else np.concatenate(starts_arrays))
+    ends = (ends_arrays[0] if len(ends_arrays) == 1
+            else np.concatenate(ends_arrays))
+    cores_col = (cores_arrays[0] if len(cores_arrays) == 1
+                 else np.concatenate(cores_arrays))
     starts = np.sort(starts_unsorted)
 
-    t0 = (t_submit0 if t_submit0 is not None
-          else min(t.timestamps.get("SCHEDULING", 0.0) for t in tasks))
+    if t_submit0 is not None:
+        t0 = t_submit0
+    else:
+        t0 = min((t.timestamps.get("SCHEDULING", 0.0) for t in objs),
+                 default=float("inf"))
+        for c in cohorts:
+            if c.sched_t < t0:
+                t0 = c.sched_t
     start_min = float(starts[0])
     start_max = float(starts[-1])
     end_max = float(ends.max())
@@ -99,7 +141,7 @@ def compute_metrics(tasks: Sequence[Task], total_cores: int,
     tail = np.searchsorted(starts, starts - window, side="left")
     thr_peak = float((np.arange(1, n_done + 1) - tail).max()) / window
 
-    busy = float(((ends - starts_unsorted) * np.asarray(cores_raw)).sum())
+    busy = float(((ends - starts_unsorted) * cores_col).sum())
     # utilization over the execution window (first launch -> last completion):
     # bootstrap is reported separately as `overhead`, matching the paper's
     # metric split (§4, Fig. 7).
@@ -117,24 +159,76 @@ def compute_metrics(tasks: Sequence[Task], total_cores: int,
     order = np.lexsort((deltas, times))
     peak = int(np.cumsum(deltas[order]).max())
 
-    return RunMetrics(len(tasks), n_done, n_failed, makespan,
+    return RunMetrics(n_total, n_done, n_failed, makespan,
                       thr_avg, thr_peak, min(1.0, util), overhead, peak)
+
+
+def occupancy_utilization(tasks: Sequence[Task], total_cores: int) -> float:
+    """Allocation-occupancy utilization: each completed task charges its
+    core width from LAUNCHING (allocation bound) to DONE (allocation
+    freed), over the first-launch -> last-completion window. Unlike the
+    RUNNING->DONE execution utilization in :func:`compute_metrics` this is
+    meaningful for zero-duration calibration waves (the paper's §4 null
+    workloads), where execution busy-time is identically zero while the
+    launch pipeline keeps every allocation occupied for its service time."""
+    objs, cohorts = _split_cohorts(tasks)
+    starts_raw: List[float] = []
+    ends_raw: List[float] = []
+    cores_raw: List[int] = []
+    for t in objs:
+        if t.state is not TaskState.DONE:
+            continue
+        ts = t.timestamps
+        if "LAUNCHING" not in ts:
+            continue
+        starts_raw.append(ts["LAUNCHING"])
+        ends_raw.append(ts["DONE"])
+        d = t.description
+        cores_raw.append(d.nodes * CORES_PER_NODE if d.nodes
+                         else max(1, d.cores))
+    starts_arrays = ([np.asarray(starts_raw)] if starts_raw else [])
+    ends_arrays = ([np.asarray(ends_raw)] if ends_raw else [])
+    cores_arrays = ([np.asarray(cores_raw)] if cores_raw else [])
+    for c in cohorts:
+        if c.launch_t is None:
+            continue
+        starts_arrays.append(c.launch_t)
+        ends_arrays.append(c.done_t)
+        cores_arrays.append(np.full(c.n, c.cores_per_task(), dtype=np.int64))
+    if not starts_arrays:
+        return 0.0
+    starts = np.concatenate(starts_arrays)
+    ends = np.concatenate(ends_arrays)
+    cores = np.concatenate(cores_arrays)
+    window = float(ends.max() - starts.min())
+    if window <= 0.0 or total_cores <= 0:
+        return 0.0
+    busy = float(((ends - starts) * cores).sum())
+    return min(1.0, busy / (total_cores * window))
 
 
 def concurrency_series(tasks: Sequence[Task], dt: float = 10.0
                        ) -> List[tuple]:
     """(t, #running) samples — the paper's Fig. 4/8 green curves."""
+    objs, cohorts = _split_cohorts(tasks)
     starts_raw: List[float] = []
     ends_raw: List[float] = []
-    for t in tasks:
+    for t in objs:
         ts = t.timestamps
         if "RUNNING" in ts and ("DONE" in ts or "FAILED" in ts):
             starts_raw.append(ts["RUNNING"])
             ends_raw.append(ts.get("DONE", ts.get("FAILED")))
-    if not starts_raw:
+    starts_arrays = ([np.asarray(starts_raw)] if starts_raw else [])
+    ends_arrays = ([np.asarray(ends_raw)] if ends_raw else [])
+    for c in cohorts:
+        if c.run_t is None:
+            continue
+        starts_arrays.append(c.run_t)
+        ends_arrays.append(c.done_t)
+    if not starts_arrays:
         return []
-    n = len(starts_raw)
-    times = np.concatenate([np.asarray(starts_raw), np.asarray(ends_raw)])
+    n = sum(len(a) for a in starts_arrays)
+    times = np.concatenate(starts_arrays + ends_arrays)
     deltas = np.concatenate([np.ones(n, np.int64), -np.ones(n, np.int64)])
     order = np.lexsort((deltas, times))
     t_sorted = times[order]

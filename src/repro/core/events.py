@@ -21,7 +21,10 @@ that never inspect the trace never build them.
 from __future__ import annotations
 
 from array import array
-from typing import Any, Dict, Iterator, List, Optional
+from bisect import bisect_right
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import numpy as np
 
 _NAME_BITS = 20                      # <=1M distinct event names
 _NAME_MASK = (1 << _NAME_BITS) - 1
@@ -56,10 +59,15 @@ class Profiler:
     def __init__(self):
         self._times = array("d")          # event timestamps
         self._ids = array("q")            # (entity_id << _NAME_BITS) | name_id
-        self._entities: List[str] = []    # entity id -> string
+        self._entity_names: Dict[int, str] = {}   # entity id -> string
         self._names: List[str] = []       # name id -> string
         self._entity_ids: Dict[str, int] = {}
         self._name_ids: Dict[str, int] = {}
+        self._next_eid = 0
+        # lazily-named entity blocks (cohort waves): (base, count, name_fn),
+        # sorted by base — entity_of resolves ids in a block through name_fn
+        # without ever materializing the block's id->string map
+        self._entity_blocks: List[tuple] = []
         self._data: Dict[int, Any] = {}   # sparse: row -> payload
         # generic memo for hot callers caching name ids keyed by their own
         # tokens (e.g. task.py keys it by TaskState)
@@ -73,9 +81,21 @@ class Profiler:
     def entity_id(self, entity: str) -> int:
         eid = self._entity_ids.get(entity)
         if eid is None:
-            eid = self._entity_ids[entity] = len(self._entities)
-            self._entities.append(entity)
+            eid = self._entity_ids[entity] = self._next_eid
+            self._next_eid = eid + 1
+            self._entity_names[eid] = entity
         return eid
+
+    def reserve_entities(self, count: int,
+                         name_fn: Callable[[int], str]) -> int:
+        """Reserve ``count`` consecutive entity ids whose names resolve
+        lazily: id ``base + i`` maps to ``name_fn(i)``. Nothing per entity
+        is stored — cohort waves use this so a 10M-task trace does not
+        intern 10M uid strings."""
+        base = self._next_eid
+        self._next_eid = base + count
+        self._entity_blocks.append((base, count, name_fn))
+        return base
 
     def name_id(self, name: str) -> int:
         nid = self._name_ids.get(name)
@@ -95,6 +115,21 @@ class Profiler:
         self._times.append(time)
         self._ids.append((eid << _NAME_BITS) | nid)
 
+    def record_fast_many(self, times, eids, nid) -> None:
+        """Bulk append of payload-free events from pre-interned ids:
+        ``times`` (float array-like) and ``eids`` (int array-like) must have
+        equal length; ``nid`` is one name id for the whole batch or an
+        array of per-event name ids. Equivalent to a loop of
+        ``record_fast`` (golden-pinned in tests/test_cohort_golden.py) but
+        two C-level bulk appends regardless of batch size."""
+        times = np.ascontiguousarray(times, dtype=np.float64)
+        eids = np.ascontiguousarray(eids, dtype=np.int64)
+        if len(times) != len(eids):
+            raise ValueError("record_fast_many: times/eids length mismatch")
+        packed = (eids << _NAME_BITS) | np.asarray(nid, dtype=np.int64)
+        self._times.frombytes(times.tobytes())
+        self._ids.frombytes(np.ascontiguousarray(packed).tobytes())
+
     def record(self, time: float, entity: str, name: str,
                data: Optional[Dict[str, Any]] = None) -> int:
         """Append one event; returns its row index."""
@@ -110,7 +145,7 @@ class Profiler:
     def _event_at(self, row: int) -> Event:
         packed = self._ids[row]
         return Event(self._times[row],
-                     self._entities[packed >> _NAME_BITS],
+                     self.entity_of(packed >> _NAME_BITS),
                      self._names[packed & _NAME_MASK],
                      self._data.get(row))
 
@@ -166,7 +201,16 @@ class Profiler:
         return self._names[nid]
 
     def entity_of(self, eid: int) -> str:
-        return self._entities[eid]
+        name = self._entity_names.get(eid)
+        if name is not None:
+            return name
+        blocks = self._entity_blocks
+        i = bisect_right(blocks, eid, key=lambda b: b[0]) - 1
+        if i >= 0:
+            base, count, name_fn = blocks[i]
+            if eid < base + count:
+                return name_fn(eid - base)
+        raise KeyError(f"unknown entity id {eid}")
 
     # ----------------------------------------------------------- view compat
     @property

@@ -168,6 +168,10 @@ class SimLaunchServer:
         self._claim_task: Optional[Task] = None
         self.busy = False
         self.dead = False
+        # while a planned cohort wave (repro.core.cohort) occupies this
+        # server, pump() is a no-op until the wave's planned end time — an
+        # event resets this to 0.0 and re-pumps
+        self._cohort_until = 0.0
         self.running: Dict[str, Task] = {}
         self.on_complete: Optional[Callable[[Task], None]] = None
         self.on_failure: Optional[Callable[[Task, str], None]] = None
@@ -197,7 +201,7 @@ class SimLaunchServer:
             self._stall_head = None        # pool changed: rescan
 
     def pump(self):
-        if self.busy or self.dead:
+        if self.busy or self.dead or self._cohort_until:
             return
         # a sibling server (shared backlog) may have launched — or the agent
         # canceled — the gang this claim was draining nodes for: release it

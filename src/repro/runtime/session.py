@@ -21,7 +21,7 @@ manager routes task submissions to pilot agents and blocks on completion.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 from repro.core.pilot import Pilot, PilotDescription, PilotState
 from repro.core.task import Task, TaskDescription, new_uid
@@ -157,6 +157,7 @@ class TaskManager:
         self.uid = uid or new_uid("tmgr")
         self._pilots: List[Pilot] = []
         self.tasks: Dict[str, Task] = {}
+        self._waves: List[Any] = []       # CohortWaves (columnar bulks)
         self._scheduler = scheduler
         session._tmgrs.append(self)
 
@@ -197,9 +198,30 @@ class TaskManager:
         # seed least-loaded bulk path; gated policies hold tasks in their
         # queue and release on placement (engine.lock is taken inside)
         tasks = self.scheduler.submit(descs)
+        if not isinstance(tasks, list):
+            # cohort fast path: the bulk stays columnar (a CohortWave) —
+            # registering a million per-uid entries would defeat it
+            self._waves.append(tasks)
+            return tasks
         for t in tasks:
             self.tasks[t.uid] = t
         return tasks[0] if single else tasks
+
+    def submit_wave(self, template: TaskDescription, n: int):
+        """Bulk-submit ``n`` clones of ``template`` to the (single) bound
+        pilot, preferring the cohort fast path (columnar, O(1) memory per
+        task at submit). Falls back to materialized object tasks when the
+        wave is not cohort-eligible. Returns a ``CohortWave`` or list."""
+        if self.session.closed:
+            raise RuntimeError(f"{self.uid}: session {self.session.uid} "
+                               f"is closed")
+        wave = self.agent.submit_wave(template, n)
+        if isinstance(wave, list):
+            for t in wave:
+                self.tasks[t.uid] = t
+        else:
+            self._waves.append(wave)
+        return wave
 
     # ------------------------------------------------------------- services
     def start_service(self, handler=None, *, replicas: int = 2,
@@ -251,7 +273,8 @@ class TaskManager:
         def finished() -> bool:
             if watched is not None:
                 return all(t.done for t in watched)
-            return all(t.done for t in self.tasks.values())
+            return (all(w.done for w in self._waves)
+                    and all(t.done for t in self.tasks.values()))
 
         return self.session.engine.drain(finished, timeout=timeout)
 

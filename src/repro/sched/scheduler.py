@@ -159,7 +159,8 @@ class CampaignScheduler:
             view.nid_release = self.engine.profiler.name_id(
                 f"sched:release:p{view.index}")
             self.views.append(view)
-            agent.add_done_callback(self._on_task_done)
+            agent.add_done_callback(self._on_task_done,
+                                    cohort_safe=self._cohort_safe)
             if self.admission and self.gang_reserve:
                 # arm backend-level gang reservations: the launch servers
                 # perform the authoritative drain for gangs this scheduler
@@ -173,6 +174,17 @@ class CampaignScheduler:
         """Terminal-state listener across every registered pilot (the
         surface campaigns bind to)."""
         self._done_callbacks.append(cb)
+
+    def _cohort_safe(self) -> bool:
+        """Probe for the agent's cohort fast path: skipping per-task
+        ``_on_task_done`` calls is semantics-preserving exactly when this
+        scheduler holds no per-task state a completion would advance — no
+        admission accounting, no allocations to credit, no dependency
+        waiters, no held entries, no campaign listeners."""
+        return (not self.admission and not self._released
+                and not self._dep_wait and not self._entry_by_uid
+                and not self._gangs and not len(self.policy)
+                and not self._done_callbacks)
 
     # ------------------------------------------------------------- properties
     @property
@@ -275,7 +287,18 @@ class CampaignScheduler:
             if resubmit:
                 tasks = view.agent.resubmit(ready, origin)
             else:
-                tasks = view.agent.submit(ready)
+                # allow the agent's cohort fast path only when the whole
+                # bulk is dependency-free: a wave has no per-task objects
+                # to splice into the placeholder slots
+                tasks = view.agent.submit(ready,
+                                          cohort=len(ready) == len(out))
+            if not isinstance(tasks, list):
+                # planned CohortWave: columnar, already in flight
+                engine.profiler.record(engine.now(), self.uid,
+                                       "sched:release",
+                                       {"n": len(tasks),
+                                        "pilot": view.index})
+                return tasks
             it = iter(tasks)
             for i, slot in enumerate(out):
                 if isinstance(slot, TaskDescription):

@@ -1,0 +1,285 @@
+"""Golden-equivalence suite for the vectorized cohort task state machine
+(repro.core.cohort): with the cohort gate on, an eligible homogeneous wave
+must produce *identical* results to the object path — same compute_metrics
+(ints exact, floats to <=1e-9 relative, from numpy pairwise summation
+only), same concurrency_series tuples, same terminal counts, same trace
+event counts — on both the flux-only and the flux+dragon hybrid configs.
+Plus the bulk profiler append (record_fast_many) against a record_fast
+loop, eligibility fallbacks, and a hypothesis property test over random
+uniform waves."""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import analytics as A
+from repro.core.events import Profiler
+from repro.core.pilot import PilotDescription
+from repro.core.task import CohortWave, TaskDescription, TaskState
+from repro.runtime.session import PilotManager, Session, TaskManager
+
+_INT_FIELDS = {"n_tasks", "n_done", "n_failed", "concurrency_peak"}
+
+
+# --------------------------------------------------------------------------
+# harness: run the same campaign with the cohort gate off (object path,
+# golden) and on (planned wave), return everything the assertions compare
+# --------------------------------------------------------------------------
+
+def _run(descs_fn, *, cohort: bool, hybrid: bool = False, seed: int = 42,
+         cohort_min: int = 500, wave=None):
+    with Session(mode="sim", seed=seed) as session:
+        if hybrid:
+            backends = {"flux": {"nodes": 32, "partitions": 8},
+                        "dragon": {"nodes": 32, "partitions": 8}}
+        else:
+            backends = {"flux": {"partitions": 8}}
+        pilot = PilotManager(session).submit_pilots(
+            PilotDescription(nodes=64, backends=backends),
+            cohort=cohort, cohort_min=cohort_min)
+        tm = TaskManager(session)
+        tm.add_pilots(pilot)
+        if wave is not None:
+            template, n = wave
+            submitted = tm.submit_wave(template, n)
+        else:
+            submitted = tm.submit_tasks(descs_fn())
+        tm.wait_tasks()
+        agent = pilot.agent
+        tasks = agent.all_tasks()
+        return {
+            "submitted": submitted,
+            "metrics": A.compute_metrics(tasks, agent.total_cores),
+            "series": A.concurrency_series(tasks),
+            "occupancy": A.occupancy_utilization(tasks, agent.total_cores),
+            "n_unfinished": agent.n_unfinished,
+            "completed": {name: ex.stats["completed"]
+                          for name, ex in agent.backends.items()},
+            "trace_counts": {
+                k: v for k, v in
+                session.profiler.counts_by_name().items()
+                if k.startswith("state:")},
+            "n_cohorts": len(agent.cohorts),
+            "end": session.engine.now(),
+        }
+
+
+def _assert_equivalent(off, on):
+    m_off, m_on = off["metrics"], on["metrics"]
+    for field, ref_v in m_off.__dict__.items():
+        got_v = m_on.__dict__[field]
+        if field in _INT_FIELDS:
+            assert got_v == ref_v, f"{field}: {got_v} != {ref_v}"
+        elif ref_v == 0.0:
+            assert got_v == 0.0, f"{field}: {got_v} != 0"
+        else:
+            rel = abs(got_v - ref_v) / abs(ref_v)
+            assert rel <= 1e-9, f"{field}: {got_v} vs {ref_v} (rel {rel})"
+    assert off["series"] == on["series"]
+    occ_ref = off["occupancy"]
+    assert abs(on["occupancy"] - occ_ref) <= 1e-9 * max(occ_ref, 1e-12)
+    assert off["n_unfinished"] == on["n_unfinished"] == 0
+    assert off["completed"] == on["completed"]
+    assert off["trace_counts"] == on["trace_counts"]
+    assert off["end"] == on["end"]
+
+
+def _null_descs(n, hybrid=False, cores=1, duration=0.0, rng=None):
+    def build():
+        out = []
+        for i in range(n):
+            kind = "function" if (hybrid and i % 2) else "executable"
+            dur = rng.uniform(0.0, 0.2) if rng is not None else duration
+            out.append(TaskDescription(kind=kind, cores=cores, duration=dur))
+        return out
+    return build
+
+
+# --------------------------------------------------------------------------
+# tentpole equivalence: flux config, hybrid config, durations, wave API
+# --------------------------------------------------------------------------
+
+def test_cohort_golden_flux_null():
+    off = _run(_null_descs(2500), cohort=False)
+    on = _run(_null_descs(2500), cohort=True)
+    assert on["n_cohorts"] == 1
+    assert isinstance(on["submitted"], CohortWave)
+    _assert_equivalent(off, on)
+
+
+def test_cohort_golden_hybrid_null():
+    off = _run(_null_descs(2500, hybrid=True), cohort=False, hybrid=True)
+    on = _run(_null_descs(2500, hybrid=True), cohort=True, hybrid=True)
+    assert on["n_cohorts"] == 2
+    _assert_equivalent(off, on)
+
+
+def test_cohort_golden_uniform_duration_pool_binding():
+    # nonzero durations make allocations outlive launches, so the planner's
+    # finish-heap pool model is on the line here
+    descs = _null_descs(2000, cores=8, duration=0.5)
+    off = _run(descs, cohort=False)
+    on = _run(descs, cohort=True)
+    _assert_equivalent(off, on)
+
+
+def test_cohort_golden_random_durations_hybrid():
+    off = _run(_null_descs(2000, hybrid=True, cores=2,
+                           rng=random.Random(7)),
+               cohort=False, hybrid=True)
+    on = _run(_null_descs(2000, hybrid=True, cores=2,
+                          rng=random.Random(7)),
+              cohort=True, hybrid=True)
+    _assert_equivalent(off, on)
+
+
+def test_cohort_wave_api_matches_descs():
+    template = TaskDescription(cores=1, duration=0.0)
+    off = _run(_null_descs(2500), cohort=False)
+    on = _run(None, cohort=True, wave=(TaskDescription(cores=1,
+                                                       duration=0.0), 2500))
+    assert isinstance(on["submitted"], CohortWave)
+    _assert_equivalent(off, on)
+    assert template is not None
+
+
+def test_cohort_view_surface():
+    on = _run(_null_descs(1200), cohort=True)
+    wave = on["submitted"]
+    assert len(wave) == 1200
+    view = wave[7]
+    assert view.state is TaskState.DONE
+    ts = view.timestamps
+    assert (ts["SCHEDULING"] <= ts["QUEUED"] <= ts["LAUNCHING"]
+            <= ts["RUNNING"] <= ts["DONE"])
+    assert view.done and view.result is None and view.retries == 0
+    assert wave[-1].uid != view.uid
+
+
+# --------------------------------------------------------------------------
+# eligibility gates: ineligible shapes fall back to the object path
+# --------------------------------------------------------------------------
+
+def test_cohort_gate_off_env(monkeypatch):
+    monkeypatch.setenv("REPRO_COHORT", "0")
+    on = _run(_null_descs(1200), cohort=True)
+    assert on["n_cohorts"] == 0
+    assert isinstance(on["submitted"], list)
+
+
+def test_cohort_below_min_uses_object_path():
+    on = _run(_null_descs(300), cohort=True, cohort_min=500)
+    assert on["n_cohorts"] == 0
+
+
+def test_cohort_ineligible_descs_fall_back():
+    def descs():
+        out = [TaskDescription(cores=1, duration=0.0) for _ in range(600)]
+        out[300] = TaskDescription(cores=1, duration=0.0, max_retries=2)
+        return out
+    on = _run(descs, cohort=True)
+    assert on["n_cohorts"] == 0
+    off = _run(descs, cohort=False)
+    _assert_equivalent(off, on)
+
+
+def test_cohort_gang_tasks_fall_back():
+    def descs():
+        return [TaskDescription(cores=1, nodes=2, duration=0.0)
+                for _ in range(600)]
+    on = _run(descs, cohort=True)
+    assert on["n_cohorts"] == 0
+
+
+# --------------------------------------------------------------------------
+# record_fast_many: bulk append vs a loop of record_fast
+# --------------------------------------------------------------------------
+
+def test_record_fast_many_matches_loop():
+    rng = random.Random(3)
+    times = [rng.uniform(0.0, 1e6) for _ in range(5000)]
+    p_loop, p_bulk = Profiler(), Profiler()
+    nid_l = p_loop.name_id("state:DONE")
+    nid_b = p_bulk.name_id("state:DONE")
+    assert nid_l == nid_b
+    eids_l = [p_loop.entity_id(f"task.{i:06d}") for i in range(5000)]
+    base = p_bulk.reserve_entities(5000, lambda i: f"task.{i:06d}")
+    for t, e in zip(times, eids_l):
+        p_loop.record_fast(t, e, nid_l)
+    p_bulk.record_fast_many(np.asarray(times),
+                            np.arange(base, base + 5000, dtype=np.int64),
+                            nid_b)
+    assert list(p_loop.time_column()) == list(p_bulk.time_column())
+    assert list(p_loop.id_column()) == list(p_bulk.id_column())
+    # lazy block naming resolves identically to interned entities
+    for row in (0, 1234, 4999):
+        assert (p_loop._event_at(row).entity
+                == p_bulk._event_at(row).entity)
+    assert p_loop.counts_by_name() == p_bulk.counts_by_name()
+
+
+def test_record_fast_many_length_mismatch():
+    p = Profiler()
+    nid = p.name_id("x")
+    with pytest.raises(ValueError):
+        p.record_fast_many(np.zeros(3), np.zeros(2, dtype=np.int64), nid)
+
+
+def test_reserve_entities_interleaves_with_interning():
+    p = Profiler()
+    a = p.entity_id("alpha")
+    base = p.reserve_entities(10, lambda i: f"blk.{i}")
+    b = p.entity_id("beta")
+    assert b == base + 10 and a == 0
+    assert p.entity_of(base + 3) == "blk.3"
+    assert p.entity_of(b) == "beta"
+    with pytest.raises(KeyError):
+        p.entity_of(base + 10 + 99)
+
+
+# --------------------------------------------------------------------------
+# property test: random uniform waves (hypothesis, when available)
+# --------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(min_value=500, max_value=1500),
+           cores=st.integers(min_value=1, max_value=16),
+           duration=st.floats(min_value=0.0, max_value=1.0,
+                              allow_nan=False, allow_infinity=False),
+           hybrid=st.booleans())
+    def test_cohort_property_uniform_waves(n, cores, duration, hybrid):
+        descs = _null_descs(n, hybrid=hybrid, cores=cores,
+                            duration=duration)
+        off = _run(descs, cohort=False, hybrid=hybrid)
+        on = _run(descs, cohort=True, hybrid=hybrid)
+        assert on["n_cohorts"] == (2 if hybrid else 1)
+        _assert_equivalent(off, on)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_cohort_property_uniform_waves():
+        pass
+
+
+def test_cohort_property_random_seeds_fallback():
+    """Seeded stand-in for the hypothesis sweep (always runs): random
+    uniform wave shapes across both configs."""
+    rng = random.Random(11)
+    for _ in range(4):
+        n = rng.randint(500, 1200)
+        cores = rng.choice((1, 2, 8, 16))
+        duration = rng.choice((0.0, rng.uniform(0.0, 1.0)))
+        hybrid = rng.random() < 0.5
+        descs = _null_descs(n, hybrid=hybrid, cores=cores,
+                            duration=duration)
+        off = _run(descs, cohort=False, hybrid=hybrid)
+        on = _run(descs, cohort=True, hybrid=hybrid)
+        assert on["n_cohorts"] == (2 if hybrid else 1)
+        _assert_equivalent(off, on)
