@@ -1,0 +1,229 @@
+"""Fault-model / recovery benchmark -> BENCH_faults.json.
+
+Characterizes the runtime's node- and pilot-level fault model the way the
+RP characterization work (arXiv:2103.00091) treats failure recovery — as a
+first-order term in sustained campaign throughput:
+
+* **node loss (sim)** — a 256-node, two-pilot campaign loses 10% of its
+  nodes at random times mid-run (ChaosController + FaultPlan.node_loss).
+  Every task killed by a dying node retries with exponential backoff;
+  checkpointing tasks resume from their last banked step. Acceptance:
+  zero lost tasks (every task DONE), and the checkpoint-resume variant
+  beats the restart-from-zero variant on makespan under the *same* fault
+  plan and seed.
+* **pilot loss (sim)** — one of two pilots dies mid-campaign; all of its
+  in-flight and queued tasks requeue through the CampaignScheduler onto
+  the survivor. Acceptance: zero lost tasks.
+* **node + pilot loss (real)** — the same chaos plan shape against real
+  worker threads (emulated node loss + a pilot kill); zero lost tasks.
+
+Exits nonzero on any lost task or a resume-vs-restart makespan regression.
+
+Usage:
+    PYTHONPATH=src python benchmarks/fault_recovery.py            # full
+    PYTHONPATH=src python benchmarks/fault_recovery.py --quick    # CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Dict, List
+
+from repro.core.analytics import fault_metrics
+from repro.core.pilot import PilotDescription
+from repro.core.task import TaskDescription, TaskState
+from repro.faults import ChaosController, FaultEvent, FaultPlan
+from repro.runtime import PilotManager, Session, TaskManager
+from repro.sched import CampaignScheduler
+
+
+def sim_node_loss_run(n_nodes: int, n_tasks: int, loss_fraction: float,
+                      seed: int, checkpoints: bool) -> Dict:
+    """One sim campaign under node chaos. ``checkpoints`` toggles the
+    recovery mode: banked progress (resume) vs restart-from-zero — same
+    fault plan, same seed, so the makespans are directly comparable."""
+    wall0 = time.time()
+    duration, period = 240.0, 20.0
+    with Session(mode="sim", seed=seed) as session:
+        pilots = PilotManager(session).submit_pilots(
+            [PilotDescription(nodes=n_nodes // 2,
+                              backends={"flux": {"partitions": 4}})
+             for _ in range(2)],
+            retry_backoff=2.0, retry_jitter=0.25)
+        # window wide enough to release a full wave per pass: the tail must
+        # be set by fault recovery, not by release throttling
+        sched = CampaignScheduler(policy="fifo", admission=True,
+                                  window=4096)
+        tmgr = TaskManager(session, scheduler=sched)
+        tmgr.add_pilots(pilots)
+        plan = FaultPlan.node_loss(n_nodes, loss_fraction,
+                                   horizon=450.0, seed=seed + 1)
+        chaos = ChaosController(sched, plan, seed=seed + 2)
+        chaos.arm()
+        tasks = tmgr.submit_tasks([TaskDescription(
+            cores=28, duration=duration, max_retries=12,
+            checkpoint_dir=f"ckpt://task{i}" if checkpoints else "",
+            checkpoint_period=period if checkpoints else 0.0)
+            for i in range(n_tasks)])
+        assert tmgr.wait_tasks(timeout=600), "campaign did not drain"
+        lost = [t for t in tasks if t.state is not TaskState.DONE]
+        makespan = (max(t.timestamps["DONE"] for t in tasks
+                        if t.state is TaskState.DONE)
+                    if len(lost) < len(tasks) else float("inf"))
+        m = fault_metrics(session.profiler)
+        return {
+            "config": (f"{n_nodes} nodes x 2 pilots, {n_tasks} tasks, "
+                       f"{loss_fraction:.0%} node loss, "
+                       f"{'checkpoint-resume' if checkpoints else 'restart'}"),
+            "n_tasks": n_tasks,
+            "n_lost": len(lost),
+            "makespan_s": round(makespan, 2),
+            "node_failures": m.node_failures,
+            "tasks_killed": m.tasks_killed,
+            "retries": m.retries_total,
+            "retries_by_cause": m.retries_by_cause,
+            "checkpoint_resumes": m.checkpoint_resumes,
+            "recovered_core_s": round(m.recovered_core_s, 1),
+            "view_shrinks": m.view_shrinks,
+            "wall_s": round(time.time() - wall0, 2),
+        }
+
+
+def sim_pilot_loss_run(n_nodes: int, n_tasks: int, seed: int) -> Dict:
+    wall0 = time.time()
+    with Session(mode="sim", seed=seed) as session:
+        pilots = PilotManager(session).submit_pilots(
+            [PilotDescription(nodes=n_nodes // 2,
+                              backends={"flux": {"partitions": 4}})
+             for _ in range(2)],
+            retry_backoff=2.0)
+        sched = CampaignScheduler(policy="fifo", admission=True,
+                                  window=4096)
+        tmgr = TaskManager(session, scheduler=sched)
+        tmgr.add_pilots(pilots)
+        chaos = ChaosController(
+            sched, FaultPlan([FaultEvent(90.0, "pilot", pilot=0)]),
+            seed=seed)
+        chaos.arm()
+        tasks = tmgr.submit_tasks([TaskDescription(cores=28, duration=120.0,
+                                                   max_retries=6)
+                                   for _ in range(n_tasks)])
+        assert tmgr.wait_tasks(timeout=600), "campaign did not drain"
+        lost = [t for t in tasks if t.state is not TaskState.DONE]
+        m = fault_metrics(session.profiler)
+        return {
+            "config": (f"{n_nodes} nodes x 2 pilots, {n_tasks} tasks, "
+                       f"pilot 0 killed mid-campaign"),
+            "n_tasks": n_tasks,
+            "n_lost": len(lost),
+            "pilot_failures": m.pilot_failures,
+            "tasks_requeued": m.tasks_requeued,
+            "wall_s": round(time.time() - wall0, 2),
+        }
+
+
+def real_chaos_run(n_tasks: int, seed: int) -> Dict:
+    """The same chaos shape against real worker threads: one emulated node
+    loss plus a pilot kill, zero lost tasks expected."""
+    wall0 = time.time()
+    with Session(mode="real", seed=seed) as session:
+        pilots = PilotManager(session).submit_pilots(
+            [PilotDescription(nodes=1, backends={"dragon": {"workers": 4}}),
+             PilotDescription(nodes=1,
+                              backends={"dragon": {"workers": 4}})],
+            retry_backoff=0.05)
+        sched = CampaignScheduler(policy="fifo", admission=False)
+        tmgr = TaskManager(session, scheduler=sched)
+        tmgr.add_pilots(pilots)
+        chaos = ChaosController(
+            sched, FaultPlan([FaultEvent(0.06, "node"),
+                              FaultEvent(0.12, "pilot", pilot=0)]),
+            seed=seed)
+        chaos.arm()
+        tasks = tmgr.submit_tasks(
+            [TaskDescription(kind="function", max_retries=4,
+                             fn=lambda x=i: time.sleep(0.05) or x)
+             for i in range(n_tasks)])
+        assert tmgr.wait_tasks(timeout=120), "campaign did not drain"
+        lost = [t for t in tasks if t.state is not TaskState.DONE]
+        m = fault_metrics(session.profiler)
+        return {
+            "config": (f"real: 2 pilots x 4 workers, {n_tasks} tasks, "
+                       f"1 node loss + 1 pilot kill"),
+            "n_tasks": n_tasks,
+            "n_lost": len(lost),
+            "node_failures": m.node_failures,
+            "pilot_failures": m.pilot_failures,
+            "tasks_requeued": m.tasks_requeued,
+            "retries": m.retries_total,
+            "wall_s": round(time.time() - wall0, 2),
+        }
+
+
+def main(argv: List[str] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: smaller campaign")
+    ap.add_argument("--output", default="BENCH_faults.json")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--loss", type=float, default=0.10,
+                    help="node-loss fraction (acceptance band 0.05-0.15)")
+    args = ap.parse_args(argv)
+
+    n_nodes = 64 if args.quick else 256
+    n_tasks = 150 if args.quick else 750
+    n_real = 24 if args.quick else 60
+
+    restart = sim_node_loss_run(n_nodes, n_tasks, args.loss, args.seed,
+                                checkpoints=False)
+    resume = sim_node_loss_run(n_nodes, n_tasks, args.loss, args.seed,
+                               checkpoints=True)
+    for r in (restart, resume):
+        print(f"[sim ] {r['config']:>64}  lost={r['n_lost']}  "
+              f"makespan={r['makespan_s']}s  retries={r['retries']}",
+              flush=True)
+    speedup = restart["makespan_s"] / max(resume["makespan_s"], 1e-9)
+    print(f"[sim ] checkpoint-resume makespan speedup: {speedup:.3f}x "
+          f"(recovered {resume['recovered_core_s']} core-s across "
+          f"{resume['checkpoint_resumes']} resumes)", flush=True)
+
+    pilot = sim_pilot_loss_run(n_nodes, n_tasks // 2, args.seed)
+    print(f"[sim ] {pilot['config']:>64}  lost={pilot['n_lost']}  "
+          f"requeued={pilot['tasks_requeued']}", flush=True)
+
+    real = real_chaos_run(n_real, args.seed)
+    print(f"[real] {real['config']:>64}  lost={real['n_lost']}  "
+          f"requeued={real['tasks_requeued']}", flush=True)
+
+    zero_lost = (restart["n_lost"] == 0 and resume["n_lost"] == 0
+                 and pilot["n_lost"] == 0 and real["n_lost"] == 0)
+    resume_wins = resume["makespan_s"] < restart["makespan_s"]
+    ok = zero_lost and resume_wins
+    payload = {
+        "benchmark": "fault_recovery",
+        "protocol": ("sim: a 256-node two-pilot campaign loses "
+                     f"{args.loss:.0%} of its nodes at seeded-random times; "
+                     "killed tasks retry with exponential backoff, "
+                     "checkpointing tasks resume from banked progress. The "
+                     "restart-from-zero and checkpoint-resume variants run "
+                     "the identical fault plan. A separate pass kills one "
+                     "of two pilots (scheduler requeue). real: emulated "
+                     "node loss + pilot kill against worker threads."),
+        "seed": args.seed,
+        "node_loss_fraction": args.loss,
+        "zero_lost_tasks": zero_lost,
+        "resume_makespan_speedup": round(speedup, 3),
+        "acceptance_pass": ok,
+        "sim": [restart, resume, pilot],
+        "real": [real],
+    }
+    with open(args.output, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.output} (acceptance_pass={ok})")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -43,6 +43,11 @@ _EXPORTS = {
     "RunMetrics": "repro.core.analytics",
     "compute_metrics": "repro.core.analytics",
     "concurrency_series": "repro.core.analytics",
+    "FaultMetrics": "repro.core.analytics",
+    "fault_metrics": "repro.core.analytics",
+    "ChaosController": "repro.faults.chaos",
+    "FaultEvent": "repro.faults.chaos",
+    "FaultPlan": "repro.faults.chaos",
 }
 
 __all__ = list(_EXPORTS)

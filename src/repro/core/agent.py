@@ -163,7 +163,10 @@ class Agent:
                  speculation_quantile: float = 0.95,
                  speculation_min_samples: int = 10,
                  cohort: bool = True,
-                 cohort_min: int = 50_000):
+                 cohort_min: int = 50_000,
+                 retry_backoff: float = 0.0,
+                 retry_backoff_max: float = 60.0,
+                 retry_jitter: float = 0.0):
         self.engine = engine
         self.n_nodes = n_nodes
         self.node_spec = node_spec
@@ -174,6 +177,17 @@ class Agent:
         self.speculation_factor = speculation_factor
         self.speculation_quantile = speculation_quantile
         self.speculation_min_samples = max(1, speculation_min_samples)
+        # retry backoff: attempt n waits min(base * 2^(n-1), cap), plus a
+        # uniform jitter fraction to decorrelate retry storms. base = 0
+        # keeps the seed's immediate synchronous requeue bit-exactly (no
+        # RNG draw, no scheduled event).
+        self.retry_backoff = retry_backoff
+        self.retry_backoff_max = retry_backoff_max
+        self.retry_jitter = retry_jitter
+        self._retry_pending: Dict[str, Task] = {}   # parked on a backoff timer
+        # while evacuate() runs, failed tasks are collected here instead of
+        # being retried/finished — the failing pilot must not advance them
+        self._evacuating: Optional[List[Task]] = None
 
         # cohort fast path (repro.core.cohort): eligible homogeneous bulks
         # of >= cohort_min tasks are planned closed-form instead of running
@@ -481,17 +495,59 @@ class Agent:
                     self._n_terminal += 1
                 orig.result = task.result
 
+    @staticmethod
+    def _failure_cause(err: str) -> str:
+        err = err or ""
+        if "walltime" in err:
+            return "walltime"
+        if "node failure" in err:
+            return "node"
+        if "pilot failure" in err or "executor failure" in err:
+            return "pilot"
+        return "task"
+
+    def _retry_delay(self, n: int) -> float:
+        base = self.retry_backoff
+        if base <= 0.0:
+            return 0.0
+        delay = min(base * (2.0 ** (n - 1)), self.retry_backoff_max)
+        if self.retry_jitter > 0.0:
+            delay *= 1.0 + self.retry_jitter * self.engine.rng.random()
+        return delay
+
     def _task_failed(self, task: Task, err: str):
+        if self._evacuating is not None:
+            # pilot teardown in progress: the task is requeued elsewhere by
+            # the campaign scheduler, not retried on this dying pilot
+            self._evacuating.append(task)
+            return
         if task.retries < task.description.max_retries:
             task.retries += 1
+            delay = self._retry_delay(task.retries)
             self.engine.profiler.record(self.engine.now(), task.uid,
-                                        "agent:retry", {"n": task.retries})
+                                        "agent:retry",
+                                        {"n": task.retries, "delay": delay,
+                                         "cause": self._failure_cause(err)})
             task.advance(TaskState.SCHEDULING, self.engine.now(),
                          self.engine.profiler)
+            if delay > 0.0:
+                self._retry_pending[task.uid] = task
+                self.engine.schedule(delay, self._requeue_retry, task)
+                return
             self._dispatch_q.append(task)
             self._pump_dispatch()
             return
         self._finish(task)
+
+    def _requeue_retry(self, task: Task):
+        """Backoff timer fired: re-enter the dispatch pipeline (unless the
+        task was canceled or evacuated to another pilot meanwhile)."""
+        if self._retry_pending.pop(task.uid, None) is None:
+            return
+        if task.done or task.state is not TaskState.SCHEDULING:
+            return
+        self._dispatch_q.append(task)
+        self._pump_dispatch()
 
     def _finish(self, task: Task):
         self._n_terminal += 1
@@ -599,6 +655,58 @@ class Agent:
         self._pump_dispatch()
         if restart and hasattr(ex, "restart_instance"):
             ex.restart_instance(idx)
+
+    def evacuate(self, reason: str = "pilot failure") -> List[Task]:
+        """Pilot death: pull every non-terminal object task out of this
+        agent — dispatch queue, backend backlogs, running work, parked
+        backoff retries — and return them normalized to SCHEDULING so a
+        campaign scheduler can requeue them on surviving pilots. The dying
+        pilot performs no retries of its own (the ``_evacuating`` intercept
+        swallows the on_failure storm from the executor kills).
+
+        Unsupported shapes fail loudly rather than silently losing work:
+        a mid-flight cohort wave has no per-task objects to evacuate, and
+        service replicas belong to their owning ``Service`` fault model."""
+        if any(not c.finalized for c in self.cohorts):
+            raise RuntimeError("cannot evacuate a pilot mid-cohort-wave")
+        for ex in self.backends.values():
+            for t in ex.running_tasks():
+                if t.description.kind == "service":
+                    raise RuntimeError(
+                        "cannot evacuate a pilot hosting service replicas")
+        engine = self.engine
+        victims: Dict[str, Task] = {}
+        self._evacuating = collected = []
+        try:
+            for ex in self.backends.values():
+                for t in ex.evacuate():
+                    victims[t.uid] = t
+            for t in collected:     # running work, FAILED via on_failure
+                victims[t.uid] = t
+        finally:
+            self._evacuating = None
+        for t in self._dispatch_q:
+            if not t.done:
+                victims[t.uid] = t
+        self._dispatch_q.clear()
+        victims.update((t.uid, t) for t in self._retry_pending.values()
+                       if not t.done)
+        self._retry_pending.clear()
+        now = engine.now()
+        profiler = engine.profiler
+        out: List[Task] = []
+        for t in victims.values():
+            # drop from the dead agent's table: it will never see the task
+            # reach terminal, and n_unfinished must drain to zero here
+            self.tasks.pop(t.uid, None)
+            if t.state in (TaskState.FAILED, TaskState.QUEUED):
+                t.advance(TaskState.SCHEDULING, now, profiler)
+            t.error = None
+            t.backend = None
+            out.append(t)
+        profiler.record(now, "agent", "agent:evacuate",
+                        {"n": len(out), "reason": reason})
+        return out
 
     # ------------------------------------------------------------------- run
     def _unfinished(self) -> List[Task]:

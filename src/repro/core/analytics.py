@@ -425,6 +425,68 @@ def service_metrics(service) -> ServiceMetrics:
 
 
 # --------------------------------------------------------------------------
+# Fault-model analytics (repro.faults): failure/recovery accounting computed
+# from the columnar event trace, not from task objects — requeued tasks
+# carry only their final attempt's state, so the trace is the one place the
+# full failure history lives.
+# --------------------------------------------------------------------------
+
+@dataclass
+class FaultMetrics:
+    node_failures: int             # chaos:node_fail injections
+    pilot_failures: int            # chaos:pilot_fail injections
+    tasks_killed: int              # tasks failed directly by chaos
+    tasks_requeued: int            # sched:requeue (pilot-death evacuations)
+    retries_total: int             # agent:retry dispatches
+    retries_by_cause: Dict[str, int]   # task | node | pilot | walltime
+    walltime_kills: int            # task:walltime enforcements
+    checkpoint_resumes: int        # task:resume (restarts with progress)
+    recovered_core_s: float        # sum(progress x cores) over resumes
+    view_shrinks: int              # sched:view_shrink (admission degraded)
+
+    def as_dict(self) -> Dict[str, object]:
+        return self.__dict__.copy()
+
+
+def fault_metrics(profiler) -> FaultMetrics:
+    """Failure/recovery accounting for one run, from the engine profiler's
+    columnar trace. ``recovered_core_s`` is the core-seconds of work that
+    checkpoint-resume did *not* redo: each ``task:resume`` event carries
+    the progress (seconds of work already banked) and core width of the
+    resuming attempt."""
+    def count(name: str) -> int:
+        return len(profiler.rows_by_name(name))
+
+    killed = 0
+    for ev in profiler.by_name("chaos:node_fail"):
+        killed += int((ev.data or {}).get("n_victims", 0))
+    for ev in profiler.by_name("chaos:pilot_fail"):
+        killed += int((ev.data or {}).get("n_victims", 0))
+    by_cause: Dict[str, int] = {}
+    for ev in profiler.by_name("agent:retry"):
+        cause = (ev.data or {}).get("cause", "task")
+        by_cause[cause] = by_cause.get(cause, 0) + 1
+    recovered = 0.0
+    n_resumes = 0
+    for ev in profiler.by_name("task:resume"):
+        n_resumes += 1
+        d = ev.data or {}
+        recovered += float(d.get("progress", 0.0)) * max(
+            1, int(d.get("cores", 1)))
+    return FaultMetrics(
+        node_failures=count("chaos:node_fail"),
+        pilot_failures=count("chaos:pilot_fail"),
+        tasks_killed=killed,
+        tasks_requeued=count("sched:requeue"),
+        retries_total=sum(by_cause.values()),
+        retries_by_cause=by_cause,
+        walltime_kills=count("task:walltime"),
+        checkpoint_resumes=n_resumes,
+        recovered_core_s=recovered,
+        view_shrinks=count("sched:view_shrink"))
+
+
+# --------------------------------------------------------------------------
 # Seed pure-Python implementations, kept verbatim as the golden reference
 # for the vectorized paths above (see tests/test_analytics_golden.py).
 # --------------------------------------------------------------------------

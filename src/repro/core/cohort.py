@@ -75,6 +75,7 @@ def _desc_key(d: TaskDescription) -> tuple:
 
 def _template_ok(d: TaskDescription, spec) -> bool:
     return (d.service is None and not d.after and not d.max_retries
+            and not d.walltime and not d.checkpoint_dir
             and not d.nodes and 1 <= d.cores <= spec.cores
             and 0 <= d.gpus <= spec.gpus
             and (d.kind == "executable" or d.kind == "function"))
@@ -157,7 +158,8 @@ def _scan_groups(agent, descs) -> Optional[tuple]:
     durs: Optional[List[float]] = None
     i = 0
     for d in descs:
-        if (d.service is not None or d.after or d.max_retries or d.nodes):
+        if (d.service is not None or d.after or d.max_retries or d.nodes
+                or d.walltime or d.checkpoint_dir):
             return None
         c = d.cores
         g = d.gpus

@@ -89,6 +89,59 @@ class BaseExecutor(ABC):
                 return True
         return False
 
+    def fail_node(self, node: int, reason: str = "node failure"
+                  ) -> Optional[List[Task]]:
+        """Fault injection: permanently remove ``node`` from whichever
+        launch server's pool owns it. Every task with an allocation touching
+        the node fails through on_failure; the pool's capacity shrinks for
+        good. Returns the failed tasks, or None when no live server owns
+        the node (ids are per-backend — see NodePool.first_node)."""
+        for s in self._servers():
+            if not s.dead and node in s.pool.free_cores:
+                victims = s.fail_node(node, reason)
+                n = getattr(self, "n_nodes", None)
+                if isinstance(n, int) and n > 0:
+                    self.n_nodes = n - 1       # total_cores tracks the loss
+                return victims
+        return None
+
+    def live_nodes(self) -> List[int]:
+        """Node ids currently owned by live launch servers (chaos
+        targeting). Backends without node pools return [] — the chaos
+        controller falls back to their emulated node-loss path."""
+        out: List[int] = []
+        for s in self._servers():
+            if not s.dead:
+                out.extend(s.pool.free_cores.keys())
+        return out
+
+    def evacuate(self) -> List[Task]:
+        """Pilot death: kill every launch server and hand back every
+        non-terminal task this executor still held. Queued tasks return
+        as-is (still QUEUED — the agent renormalizes them); running ones
+        fail through on_failure like any kill. Shared backlogs are drained
+        here because ``kill()`` deliberately leaves them for siblings —
+        siblings that are now dying too."""
+        orphans: List[Task] = []
+        seen = set()
+        for s in self._servers():
+            if id(s.queue) not in seen:
+                seen.add(id(s.queue))
+                orphans.extend(t for t in s.queue if not t.done)
+                s.queue.clear()
+        for s in self._servers():
+            if not s.dead:
+                orphans.extend(s.kill())
+        self.alive = False
+        return orphans
+
+    def running_tasks(self) -> List[Task]:
+        """Snapshot of tasks currently holding resources (chaos targeting)."""
+        out: List[Task] = []
+        for s in self._servers():
+            out.extend(s.running.values())
+        return out
+
     def shutdown(self) -> None:
         """Release backend resources (thread pools, subprocesses)."""
 
@@ -168,6 +221,10 @@ class SimLaunchServer:
         self._claim_task: Optional[Task] = None
         self.busy = False
         self.dead = False
+        # the task between _launch and _launched: allocation already
+        # assigned but not yet in ``running`` — kill()/fail_node() must
+        # cover this limbo window or its resources leak
+        self._launching: Optional[Task] = None
         # while a planned cohort wave (repro.core.cohort) occupies this
         # server, pump() is a no-op until the wave's planned end time — an
         # event resets this to 0.0 and re-pumps
@@ -185,6 +242,7 @@ class SimLaunchServer:
         # once per task, so avoid re-binding them on every schedule() call
         self._launched_cb = self._launched
         self._complete_cb = self._complete
+        self._walltime_cb = self._walltime
 
     # -------------------------------------------------------------- submit
     def submit(self, task: Task):
@@ -289,21 +347,30 @@ class SimLaunchServer:
     def _launch(self, task: Task, alloc: Allocation):
         engine = self.engine
         task.allocation = alloc
+        task.attempt += 1
         if self.on_admit:
             self.on_admit(task)
         task.advance(TaskState.LAUNCHING, engine.now(), engine.profiler)
         self.busy = True
+        self._launching = task
         svc = self.service_time_fn(task)
         engine.schedule(svc if svc > 1e-6 else 1e-6, self._launched_cb, task)
 
     def _launched(self, task: Task):
         self.busy = False
+        if self._launching is task:
+            self._launching = None
         if self.dead:
             return
         engine = self.engine
         if task.state is TaskState.CANCELED:
             self._release(task)
             self._stall_head = None        # pool changed: rescan
+            self.pump()
+            return
+        if task.done:
+            # failed mid-launch by fault injection; already released there
+            self._stall_head = None
             self.pump()
             return
         if task.description.kind == "service":
@@ -319,8 +386,19 @@ class SimLaunchServer:
             return
         task.advance(TaskState.RUNNING, engine.now(), engine.profiler)
         self.running[task.uid] = task
+        if task.progress > 0.0:
+            # checkpoint-aware restart: the prior attempt's saved progress
+            # shortens this run (engine.actual_duration subtracts it)
+            engine.profiler.record(engine.now(), task.uid, "task:resume",
+                                   {"progress": task.progress,
+                                    "cores": task.description.cores})
         dur = engine.actual_duration(task)
-        ev = engine.schedule(dur, self._complete_cb, task)
+        wt = task.description.walltime
+        if 0.0 < wt < dur:
+            # walltime enforcement: the overrun kill preempts completion
+            ev = engine.schedule(wt, self._walltime_cb, task)
+        else:
+            ev = engine.schedule(dur, self._complete_cb, task)
         self._completion_events[task.uid] = ev
         self.pump()
 
@@ -392,6 +470,17 @@ class SimLaunchServer:
             task.advance(TaskState.CANCELED, self.engine.now(),
                          self.engine.profiler)
 
+    def _walltime(self, task: Task):
+        """Per-task walltime expired: kill the run and fail it with reason.
+        Progress saved via the checkpoint contract survives into the retry."""
+        if self.dead or self.running.get(task.uid) is not task:
+            return
+        engine = self.engine
+        engine.profiler.record(engine.now(), task.uid, "task:walltime",
+                               {"limit": task.description.walltime,
+                                "attempt": task.attempt})
+        self.fail_task(task, "walltime exceeded")
+
     def fail_task(self, task: Task, reason: str):
         """Fail one running task in place (targeted fault injection /
         replica chaos) — like ``kill()`` for a single task, without taking
@@ -402,6 +491,7 @@ class SimLaunchServer:
         ev = self._completion_events.pop(task.uid, None)
         if ev is not None:
             ev.cancel()
+        task.save_progress(self.engine.now())
         self._release(task)
         self._stall_head = None            # pool changed: rescan
         task.error = f"{self.name}: {reason}"
@@ -411,6 +501,39 @@ class SimLaunchServer:
             self.on_failure(task, task.error)
         self.pump()
 
+    def fail_node(self, node: int, reason: str) -> List[Task]:
+        """A node dies: its capacity leaves the pool permanently, every
+        task whose allocation touches it fails through on_failure, and a
+        gang claim holding the node is dropped (it can never drain)."""
+        pool = self.pool
+        if pool.remove_node(node) is None:
+            return []
+        if self._claim is not None and node in self._claim.nodes:
+            self._release_claim()
+        victims = [t for t in list(self.running.values())
+                   if t.allocation is not None
+                   and (node in t.allocation.node_cores
+                        or node in t.allocation.node_gpus)]
+        for t in victims:
+            self.fail_task(t, reason)
+        lt = self._launching
+        if (lt is not None and lt.allocation is not None
+                and (node in lt.allocation.node_cores
+                     or node in lt.allocation.node_gpus)):
+            # launch-limbo victim: allocation assigned, not yet running.
+            # _launched sees the terminal state and just re-pumps.
+            self._launching = None
+            self._release(lt)
+            lt.error = f"{self.name}: {reason}"
+            lt.advance(TaskState.FAILED, self.engine.now(),
+                       self.engine.profiler)
+            if self.on_failure:
+                self.on_failure(lt, lt.error)
+            victims.append(lt)
+        self._stall_head = None            # pool changed: rescan
+        self.pump()
+        return victims
+
     def kill(self) -> List[Task]:
         """Server dies: running tasks fail; queued tasks are handed back
         (fault isolation, §4.1.3). A shared backlog survives — siblings keep
@@ -418,10 +541,15 @@ class SimLaunchServer:
         self.dead = True
         self._release_claim()
         victims = list(self.running.values())
+        lt = self._launching
+        if lt is not None and not lt.done:
+            victims.append(lt)             # mid-launch: holds an allocation
+            self._launching = None
         for t in victims:
             ev = self._completion_events.pop(t.uid, None)
             if ev is not None:
                 ev.cancel()
+            t.save_progress(self.engine.now())
             self._release(t)
             t.error = f"{self.name}: executor failure"
             t.advance(TaskState.FAILED, self.engine.now(),

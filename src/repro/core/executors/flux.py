@@ -134,6 +134,17 @@ class SimFluxExecutor(BaseExecutor):
                                     {"orphans": len(orphans)})
         return orphans
 
+    def evacuate(self) -> List[Task]:
+        """Pilot death: drain the shared backlog and kill every instance
+        (base behavior), plus flux bookkeeping — each live instance held an
+        srun slot, and the live list must empty."""
+        n_live = len(self._live)
+        orphans = super().evacuate()
+        self._refresh_live()
+        for _ in range(n_live):
+            self.engine.release_srun_slot()
+        return orphans
+
     def restart_instance(self, idx: int, delay: float = CAL.FLUX_STARTUP_S):
         """Failover: re-bootstrap a dead instance after ``delay``."""
         def _up():

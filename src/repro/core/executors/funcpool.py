@@ -112,12 +112,34 @@ class SimFuncPoolExecutor(BaseExecutor):
                                       self._service_ready, w, task)
             return
         task.advance(TaskState.RUNNING, now, engine.profiler)
+        task.attempt += 1
         self.stats["launched"] += 1
         w.task = task
         self._running[task.uid] = w
-        cost = (engine.noisy(1.0 / self.worker_rate, sigma=0.1)
-                + engine.actual_duration(task))
-        w.event = engine.schedule(max(cost, 1e-6), self._done, w, task)
+        if task.progress > 0.0:
+            engine.profiler.record(now, task.uid, "task:resume",
+                                   {"progress": task.progress,
+                                    "cores": task.description.cores})
+        # rng draw order matches the seed: dispatch noise before duration
+        dispatch = engine.noisy(1.0 / self.worker_rate, sigma=0.1)
+        dur = engine.actual_duration(task)
+        wt = task.description.walltime
+        if 0.0 < wt < dur:
+            w.event = engine.schedule(max(dispatch + wt, 1e-6),
+                                      self._timeout, w, task)
+        else:
+            w.event = engine.schedule(max(dispatch + dur, 1e-6),
+                                      self._done, w, task)
+
+    def _timeout(self, w: _Worker, task: Task):
+        """Per-task walltime expired mid-call: kill and fail with reason."""
+        if self._running.get(task.uid) is not w:
+            return
+        engine = self.engine
+        engine.profiler.record(engine.now(), task.uid, "task:walltime",
+                               {"limit": task.description.walltime,
+                                "attempt": task.attempt})
+        self.fail_task(task, "walltime exceeded")
 
     def _done(self, w: _Worker, task: Task):
         engine = self.engine
@@ -179,6 +201,7 @@ class SimFuncPoolExecutor(BaseExecutor):
             return False
         if w.event is not None:
             w.event.cancel()
+        task.save_progress(self.engine.now())
         task.error = f"{self.name}: {reason}"
         task.advance(TaskState.FAILED, self.engine.now(),
                      self.engine.profiler)
@@ -187,6 +210,23 @@ class SimFuncPoolExecutor(BaseExecutor):
             self.on_failure(task, task.error)
         self._release_worker(w)
         return True
+
+    def evacuate(self) -> List[Task]:
+        """Pilot death: hand back the backlog, fail every in-worker call
+        through on_failure (no launch servers here — the worker pool IS the
+        resource, so the base kill path does not apply)."""
+        orphans = [t for t in self.backlog if not t.done]
+        self.backlog.clear()
+        victims = [w.task for w in list(self._running.values())
+                   if w.task is not None]
+        for t in victims:
+            self.fail_task(t, "executor failure")
+        self.alive = False
+        return orphans
+
+    def running_tasks(self) -> List[Task]:
+        return [w.task for w in self._running.values()
+                if w.task is not None]
 
     # ---------------------------------------------------------------- control
     def cancel(self, task: Task):

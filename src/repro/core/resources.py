@@ -30,10 +30,18 @@ class Allocation:
     """cores/gpus taken per node index."""
     node_cores: Dict[int, int] = field(default_factory=dict)
     node_gpus: Dict[int, int] = field(default_factory=dict)
+    # set by NodePool.free: an allocation may be returned exactly once.
+    # Chaos can race a task failure against its launch server's release;
+    # the second free of the same handle must not re-credit the pool.
+    freed: bool = False
 
     @property
     def total_cores(self) -> int:
         return sum(self.node_cores.values())
+
+
+class DoubleFreeError(RuntimeError):
+    """An Allocation was returned to a NodePool twice."""
 
 
 class NodeClaim:
@@ -63,6 +71,10 @@ class NodePool:
         # nodes held by an active NodeClaim: excluded from every alloc path
         # until the claim launches (alloc_claimed) or is released
         self.held: Set[int] = set()
+        # nodes removed by fault injection: their capacity is gone for good
+        # and frees targeting them are silently dropped
+        self.lost: Set[int] = set()
+        self.double_frees = 0
 
     # ------------------------------------------------------------------ alloc
     def can_fit(self, td: TaskDescription) -> bool:
@@ -145,9 +157,12 @@ class NodePool:
         return NodeClaim(want, nodes)
 
     def claim_ready(self, c: NodeClaim) -> bool:
-        """True once every claimed node has fully drained."""
+        """True once every claimed node has fully drained. A claim that lost
+        one of its nodes to a fault can never become ready — the caller must
+        release it and re-place."""
         cores, gpus = self.spec.cores, self.spec.gpus
-        return all(self.free_cores[n] == cores and self.free_gpus[n] == gpus
+        fc = self.free_cores
+        return all(n in fc and fc[n] == cores and self.free_gpus[n] == gpus
                    for n in c.nodes)
 
     def alloc_claimed(self, td: TaskDescription, c: NodeClaim
@@ -177,12 +192,46 @@ class NodePool:
             assert self.free_gpus[n] >= 0, "gpu oversubscription"
 
     def free(self, alloc: Allocation):
+        if alloc.freed:
+            self.double_frees += 1
+            raise DoubleFreeError("allocation already freed")
+        alloc.freed = True
+        lost = self.lost
         for n, c in alloc.node_cores.items():
+            if lost and n in lost:
+                continue                       # capacity died with the node
             self.free_cores[n] += c
             assert self.free_cores[n] <= self.spec.cores, "double free"
         for n, g in alloc.node_gpus.items():
+            if lost and n in lost:
+                continue
             self.free_gpus[n] += g
             assert self.free_gpus[n] <= self.spec.gpus, "double free"
+
+    # ------------------------------------------------------------------ faults
+    def remove_node(self, node: Optional[int] = None) -> Optional[int]:
+        """Permanently remove a node from the pool (fault injection, or a
+        placement view mirroring one). When ``node`` is None the most-idle
+        unclaimed node is chosen — placement views track capacity, not
+        identity, so an idle stand-in keeps outstanding charges intact.
+        Outstanding allocations touching the node are NOT fixed up here —
+        callers fail the affected tasks, and :meth:`free` drops the lost
+        node's share when those allocations come back. Returns the removed
+        node id, or None when the pool is empty."""
+        fc = self.free_cores
+        if node is None:
+            candidates = [n for n in fc if n not in self.held] or list(fc)
+            if not candidates:
+                return None
+            node = max(candidates, key=lambda n: (fc[n], -n))
+        elif node not in fc:
+            return None
+        del self.free_cores[node]
+        del self.free_gpus[node]
+        self.lost.add(node)
+        self.held.discard(node)
+        self.n_nodes -= 1
+        return node
 
     # ------------------------------------------------------------------ stats
     @property

@@ -116,6 +116,16 @@ class TaskDescription:
     tenant: str = ""
     share: float = 1.0
     after: Tuple[str, ...] = ()
+    # fault-model fields (repro.faults): per-task walltime limit (0 = none;
+    # overrunning tasks are killed and FAILED with reason "walltime"), and
+    # the checkpoint-resume contract — checkpoint_dir names where the task
+    # persists progress, checkpoint_period how often (sim: virtual seconds
+    # of progress retained on failure; real: passed to the payload), and
+    # resume_from pins an explicit step to restart from (None = latest)
+    walltime: float = 0.0
+    checkpoint_dir: str = ""
+    checkpoint_period: float = 0.0
+    resume_from: Optional[int] = None
 
     # hand-written __init__ (same signature/defaults as the generated one,
     # __post_init__ folded in): descriptions are created once per task, so
@@ -130,7 +140,9 @@ class TaskDescription:
                  service: Optional[Any] = None,
                  restarted_from: Optional[str] = None,
                  priority: int = 0, tenant: str = "", share: float = 1.0,
-                 after: Tuple[str, ...] = ()):
+                 after: Tuple[str, ...] = (), walltime: float = 0.0,
+                 checkpoint_dir: str = "", checkpoint_period: float = 0.0,
+                 resume_from: Optional[int] = None):
         self.uid = uid or new_uid()
         self.kind = kind
         self.cores = cores
@@ -153,6 +165,10 @@ class TaskDescription:
         self.tenant = tenant
         self.share = share
         self.after = after
+        self.walltime = walltime
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_period = checkpoint_period
+        self.resume_from = resume_from
 
 
 class InvalidTransition(RuntimeError):
@@ -162,7 +178,8 @@ class InvalidTransition(RuntimeError):
 class Task:
     __slots__ = ("description", "uid", "state", "timestamps", "retries",
                  "result", "error", "backend", "partition", "allocation",
-                 "speculative_of", "_trace_eid", "_trace_prof")
+                 "speculative_of", "progress", "attempt", "_trace_eid",
+                 "_trace_prof")
 
     def __init__(self, description: TaskDescription):
         self.description = description
@@ -176,8 +193,29 @@ class Task:
         self.partition: Optional[int] = None
         self.allocation: Any = None              # resource bookkeeping handle
         self.speculative_of: Optional[str] = None
+        self.progress = 0.0     # checkpointed virtual seconds (sim resume)
+        self.attempt = 0        # execution attempt; guards stale real-mode
         self._trace_eid = -1                     # interned uid, per profiler
-        self._trace_prof = None
+        self._trace_prof = None                  # payload threads on requeue
+
+    def save_progress(self, now: float):
+        """Record checkpointed progress for a task being killed mid-run:
+        the floor of elapsed run time to the task's checkpoint period,
+        accumulated across attempts and clamped to the full duration.
+        No-op for tasks without a checkpoint contract or not yet RUNNING."""
+        d = self.description
+        period = d.checkpoint_period
+        if period <= 0 or not d.checkpoint_dir:
+            return
+        if self.state is not TaskState.RUNNING:
+            return      # e.g. killed in launch limbo: RUNNING ts is stale
+        started = self.timestamps.get("RUNNING")
+        if started is None or now <= started:
+            return
+        elapsed = self.progress + (now - started)
+        saved = (elapsed // period) * period
+        if saved > self.progress:
+            self.progress = min(saved, d.duration)
 
     def advance(self, state: TaskState, t: float, profiler=None):
         if state not in _LEGAL[self.state]:
@@ -346,6 +384,8 @@ class CohortTaskView:
     partition = None
     allocation = None
     speculative_of = None
+    progress = 0.0
+    attempt = 0
 
     def __repr__(self):
         return (f"<CohortTaskView {self.uid} {self.state.value} "

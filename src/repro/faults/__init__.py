@@ -1,0 +1,4 @@
+"""Fault injection and recovery characterization for the task runtime."""
+from repro.faults.chaos import ChaosController, FaultEvent, FaultPlan
+
+__all__ = ["ChaosController", "FaultEvent", "FaultPlan"]

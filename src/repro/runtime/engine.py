@@ -112,8 +112,15 @@ class Engine(ABC):
 
     def actual_duration(self, task) -> float:
         if self.duration_fn is not None:
-            return max(0.0, self.duration_fn(task))
-        return task.description.duration
+            dur = max(0.0, self.duration_fn(task))
+        else:
+            dur = task.description.duration
+        # checkpoint-aware restart: progress persisted by a prior attempt
+        # shortens the rerun instead of restarting from zero
+        progress = getattr(task, "progress", 0.0)
+        if progress > 0.0:
+            dur = max(dur - progress, 1e-6)
+        return dur
 
     # --- platform srun slot accounting (Frontier cap, §4.1.1) ---------------
     @property

@@ -64,6 +64,10 @@ class RealExecutorBase(BaseExecutor):
         self._pool = ThreadPoolExecutor(max_workers=max(1, workers),
                                         thread_name_prefix=thread_prefix)
         self._futures: Dict[str, Future] = {}
+        # submitted-but-not-yet-started tasks (parallel to _futures) and
+        # tasks whose payload is executing — the chaos/evacuation surface
+        self._pending_tasks: Dict[str, Task] = {}
+        self._running_tasks: Dict[str, Task] = {}
         self._active = 0
         # request queues of hosted service replicas (uid -> Queue), so
         # shutdown can unblock their serve loops with a stop sentinel
@@ -77,8 +81,10 @@ class RealExecutorBase(BaseExecutor):
     def submit(self, task: Task):
         task.backend = self.name
         try:
+            self._pending_tasks[task.uid] = task
             self._futures[task.uid] = self._pool.submit(self._run, task)
         except RuntimeError as e:       # pool shut down (session closed)
+            self._pending_tasks.pop(task.uid, None)
             eng = self.engine
             task.error = f"{self.name}: {e}"
             task.advance(TaskState.FAILED, eng.now(), eng.profiler)
@@ -93,19 +99,30 @@ class RealExecutorBase(BaseExecutor):
         eng = self.engine
         with eng.lock:
             self._futures.pop(task.uid, None)
+            self._pending_tasks.pop(task.uid, None)
             if task.done:                         # canceled while queued
                 return
             self._active += 1
+            task.attempt += 1
+            attempt = task.attempt
+            self._running_tasks[task.uid] = task
             task.advance(TaskState.LAUNCHING, eng.now(), eng.profiler)
             task.advance(TaskState.RUNNING, eng.now(), eng.profiler)
             self.stats["launched"] += 1
+            wt = task.description.walltime
+            if wt > 0.0:
+                eng.schedule(wt, self._enforce_walltime, task, attempt)
         try:
             result = self._payload(task)
         except Exception as e:                                # noqa: BLE001
             err = f"{type(e).__name__}: {e}"
             with eng.lock:
                 self._active -= 1
-                if not task.done:
+                # the attempt guard discards a stale thread's commit: the
+                # task may have been failed by chaos/walltime, requeued,
+                # and relaunched as a newer attempt while this payload ran
+                if not task.done and task.attempt == attempt:
+                    self._running_tasks.pop(task.uid, None)
                     task.error = err
                     task.advance(TaskState.FAILED, eng.now(), eng.profiler)
                     self.stats["failed"] += 1
@@ -115,7 +132,8 @@ class RealExecutorBase(BaseExecutor):
             return
         with eng.lock:
             self._active -= 1
-            if not task.done:                     # may have been CANCELED
+            if not task.done and task.attempt == attempt:
+                self._running_tasks.pop(task.uid, None)
                 task.result = result
                 task.advance(TaskState.DONE, eng.now(), eng.profiler)
                 self.stats["completed"] += 1
@@ -123,8 +141,53 @@ class RealExecutorBase(BaseExecutor):
                     self.on_complete(task)
         eng.notify()
 
+    def _enforce_walltime(self, task: Task, attempt: int):
+        """Walltime timer fired: if that attempt is still running, fail the
+        task with reason. The payload thread cannot be killed — its eventual
+        commit is discarded by the done/attempt guards (cooperative
+        enforcement; the worker slot frees when the payload returns)."""
+        eng = self.engine
+        with eng.lock:
+            if (task.done or task.attempt != attempt
+                    or task.uid not in self._running_tasks):
+                return
+            eng.profiler.record(eng.now(), task.uid, "task:walltime",
+                                {"limit": task.description.walltime,
+                                 "attempt": attempt})
+            self.fail_task(task, "walltime exceeded")
+
     def _payload(self, task: Task):
         raise NotImplementedError
+
+    def _resume_kwargs(self, task: Task, kwargs: dict) -> dict:
+        """Checkpoint-restart contract: a task with ``checkpoint_dir`` gets
+        a CheckpointManager injected as ``checkpoint`` and the step to
+        resume from as ``resume_from`` (explicit ``description.resume_from``
+        wins, else the latest checkpoint on disk; None on a cold start) —
+        each only if the callable declares the keyword, mirroring the
+        ``mesh`` injection. Import is deferred: the checkpoint module pulls
+        in jax at import time."""
+        d = task.description
+        if not d.checkpoint_dir or d.fn is None:
+            return kwargs
+        wants_mgr = _accepts_kw(d.fn, "checkpoint")
+        wants_step = _accepts_kw(d.fn, "resume_from")
+        if not (wants_mgr or wants_step):
+            return kwargs
+        from repro.checkpoint.checkpoint import CheckpointManager
+        mgr = CheckpointManager(d.checkpoint_dir, async_save=False)
+        step = (d.resume_from if d.resume_from is not None
+                else mgr.latest_step())
+        if wants_mgr:
+            kwargs["checkpoint"] = mgr
+        if wants_step:
+            kwargs["resume_from"] = step
+        if step is not None:
+            eng = self.engine
+            with eng.lock:
+                eng.profiler.record(eng.now(), task.uid, "task:resume",
+                                    {"progress": step, "cores": d.cores})
+        return kwargs
 
     # --------------------------------------------------------------- services
     def _run_service(self, task: Task):
@@ -137,9 +200,11 @@ class RealExecutorBase(BaseExecutor):
         svc = task.description.service
         with eng.lock:
             self._futures.pop(task.uid, None)
+            self._pending_tasks.pop(task.uid, None)
             if task.done or svc is None:          # canceled while queued
                 return
             self._active += 1
+            self._running_tasks[task.uid] = task
             task.advance(TaskState.LAUNCHING, eng.now(), eng.profiler)
             task.advance(TaskState.PROVISIONING, eng.now(), eng.profiler)
             self.stats["launched"] += 1
@@ -179,6 +244,7 @@ class RealExecutorBase(BaseExecutor):
         with eng.lock:
             self._active -= 1
             self._service_queues.pop(task.uid, None)
+            self._running_tasks.pop(task.uid, None)
             if not task.done:
                 if task.state in (TaskState.PROVISIONING, TaskState.READY,
                                   TaskState.SERVING):
@@ -210,6 +276,8 @@ class RealExecutorBase(BaseExecutor):
             fut = self._futures.pop(task.uid, None)
             if fut is not None:
                 fut.cancel()
+            self._pending_tasks.pop(task.uid, None)
+            self._running_tasks.pop(task.uid, None)
             task.error = f"{self.name}: {reason}"
             task.advance(TaskState.FAILED, eng.now(), eng.profiler)
             self.stats["failed"] += 1
@@ -221,6 +289,55 @@ class RealExecutorBase(BaseExecutor):
         eng.notify()
         return True
 
+    def running_tasks(self) -> List[Task]:
+        with self.engine.lock:
+            return list(self._running_tasks.values())
+
+    def fail_node(self, node: int, reason: str = "node failure"
+                  ) -> Optional[List[Task]]:
+        """Real backends have no node pools (a worker thread stands in for
+        a node): emulate a node loss by shrinking the worker pool by one
+        and failing one running payload, if any. Node ids are nominal
+        here; returns None once the pool is down to its last worker."""
+        eng = self.engine
+        with eng.lock:
+            if self.workers <= 1:
+                return None
+            self.workers -= 1
+            victims = list(self._running_tasks.values())[:1]
+        for t in victims:
+            self.fail_task(t, reason)
+        return victims
+
+    def evacuate(self) -> List[Task]:
+        """Pilot death: cancel queued payloads (returned for requeue to
+        surviving pilots) and fail running ones through on_failure. A
+        future that refuses to cancel is already entering ``_run``; failing
+        its task now means the worker thread sees a terminal state under
+        the lock and returns without launching. Payload threads already
+        executing cannot be killed — their eventual commits are discarded
+        by the done/attempt guards."""
+        eng = self.engine
+        with eng.lock:
+            orphans: List[Task] = []
+            doomed: List[Task] = []
+            for uid, task in list(self._pending_tasks.items()):
+                fut = self._futures.get(uid)
+                if fut is None or fut.cancel():
+                    self._futures.pop(uid, None)
+                    self._pending_tasks.pop(uid, None)
+                    if not task.done:
+                        orphans.append(task)
+                else:
+                    doomed.append(task)
+            doomed.extend(self._running_tasks.values())
+        for t in doomed:
+            self.fail_task(t, "executor failure")
+        self.alive = False
+        self._pool.shutdown(wait=False, cancel_futures=True)
+        eng.notify()
+        return orphans
+
     # --------------------------------------------------------------- control
     def cancel(self, task: Task):
         eng = self.engine
@@ -228,6 +345,8 @@ class RealExecutorBase(BaseExecutor):
             fut = self._futures.pop(task.uid, None)
             if fut is not None:
                 fut.cancel()
+            self._pending_tasks.pop(task.uid, None)
+            self._running_tasks.pop(task.uid, None)
             if not task.done:
                 # a still-running payload sees the terminal state at commit
                 # time and discards its result
@@ -281,7 +400,10 @@ class RealFunctionExecutor(RealExecutorBase):
 
     def _payload(self, task: Task):
         d = task.description
-        return d.fn(*d.args, **dict(d.kwargs)) if d.fn else None
+        if d.fn is None:
+            return None
+        kwargs = self._resume_kwargs(task, dict(d.kwargs))
+        return d.fn(*d.args, **kwargs)
 
 
 class RealPartitionExecutor(RealExecutorBase):
@@ -312,6 +434,7 @@ class RealPartitionExecutor(RealExecutorBase):
             kwargs = dict(d.kwargs)
             if part is not None and _accepts_kw(d.fn, "mesh"):
                 kwargs["mesh"] = part.mesh
+            kwargs = self._resume_kwargs(task, kwargs)
             return d.fn(*d.args, **kwargs) if d.fn else None
         finally:
             self._part_q.put(part)
@@ -337,8 +460,11 @@ class SubprocessExecutor(RealExecutorBase):
     def _payload(self, task: Task):
         d = task.description
         argv: List[str] = [d.executable, *map(str, d.arguments)]
+        # per-task walltime actually kills the subprocess (unlike pure
+        # python payloads, which are only failed cooperatively)
+        timeout = d.walltime if d.walltime > 0.0 else self.timeout
         proc = subprocess.run(argv, capture_output=True, text=True,
-                              timeout=self.timeout)
+                              timeout=timeout)
         if proc.returncode != 0:
             raise RuntimeError(
                 f"exit {proc.returncode}: {proc.stderr.strip()[:500]}")
@@ -347,8 +473,9 @@ class SubprocessExecutor(RealExecutorBase):
 
 def _funcpool_worker(task_q, result_q):
     """Persistent worker loop: pull one pickled *batch* of
-    (uid, fn, args, kwargs) jobs per queue op, execute them in-process, and
-    push one pickled batch of (uid, ok, result, t0, t1) records back — the
+    (uid, attempt, fn, args, kwargs) jobs per queue op, execute them
+    in-process, and push one pickled batch of
+    (uid, attempt, ok, result, t0, t1) records back — the
     mp.Queue round-trip (lock, pipe write, feeder wakeup) is paid once per
     batch instead of once per call, which is what moves the pool from the
     ~1-2k calls/s queue-bound regime toward the 10k+/s on-node rate the
@@ -365,7 +492,7 @@ def _funcpool_worker(task_q, result_q):
             break
         jobs = pickle.loads(item)
         out = []
-        for uid, fn, args, kwargs in jobs:
+        for uid, attempt, fn, args, kwargs in jobs:
             t0 = time.monotonic()
             try:
                 result = fn(*args, **(kwargs or {}))
@@ -374,17 +501,17 @@ def _funcpool_worker(task_q, result_q):
                 result = f"{type(e).__name__}: {e}"
                 ok = False
             t1 = time.monotonic()
-            out.append((uid, ok, result, t0, t1))
+            out.append((uid, attempt, ok, result, t0, t1))
         try:
             blob = pickle.dumps(out)
         except Exception:                  # unpicklable result   # noqa: BLE001
             safe = []
-            for uid, ok, result, t0, t1 in out:
+            for uid, attempt, ok, result, t0, t1 in out:
                 try:
                     pickle.dumps(result)
                 except Exception as e:                            # noqa: BLE001
                     result, ok = f"unpicklable result: {e}", False
-                safe.append((uid, ok, result, t0, t1))
+                safe.append((uid, attempt, ok, result, t0, t1))
             blob = pickle.dumps(safe)
         result_q.put(blob)
 
@@ -477,7 +604,9 @@ class FuncPoolExecutor(BaseExecutor):
         try:
             # explicit dumps: an unpicklable payload fails here,
             # synchronously, instead of dying in a queue feeder thread
-            blob = pickle.dumps([(t.uid, t.description.fn,
+            for t in tasks:
+                t.attempt += 1
+            blob = pickle.dumps([(t.uid, t.attempt, t.description.fn,
                                   t.description.args, t.description.kwargs)
                                  for t in tasks])
         except Exception as e:                                    # noqa: BLE001
@@ -532,10 +661,15 @@ class FuncPoolExecutor(BaseExecutor):
             if not records:
                 continue
             with eng.lock:
-                for uid, ok, result, t0, t1 in records:
-                    task = self._inflight.pop(uid, None)
-                    if task is None or task.done:  # canceled: discard result
+                for uid, attempt, ok, result, t0, t1 in records:
+                    task = self._inflight.get(uid)
+                    # the attempt guard keeps a stale record (task failed by
+                    # chaos, requeued, resubmitted here as a newer attempt)
+                    # from committing against the live attempt
+                    if (task is None or task.done
+                            or task.attempt != attempt):
                         continue
+                    self._inflight.pop(uid, None)
                     task.advance(TaskState.RUNNING, from_monotonic(t0),
                                  eng.profiler)
                     if ok:
@@ -564,6 +698,41 @@ class FuncPoolExecutor(BaseExecutor):
             if not task.done:
                 task.advance(TaskState.CANCELED, eng.now(), eng.profiler)
         eng.notify()
+
+    def fail_task(self, task: Task, reason: str = "executor kill") -> bool:
+        """Fault injection: an in-flight mp job cannot be recalled or
+        killed individually, so fail the task through on_failure and let
+        the collector's attempt guard discard the worker's eventual record.
+        Per-task walltime is likewise unenforceable on this backend — use
+        the thread-pool backends for walltime-sensitive payloads."""
+        eng = self.engine
+        with eng.lock:
+            if task.done:
+                return False
+            self._inflight.pop(task.uid, None)
+            task.error = f"{self.name}: {reason}"
+            task.advance(TaskState.FAILED, eng.now(), eng.profiler)
+            self.stats["failed"] += 1
+            if self.on_failure:
+                self.on_failure(task, task.error)
+        eng.notify()
+        return True
+
+    def running_tasks(self) -> List[Task]:
+        with self.engine.lock:
+            return list(self._inflight.values())
+
+    def evacuate(self) -> List[Task]:
+        """Pilot death: the worker processes die with the pilot, so every
+        in-flight job fails through on_failure (nothing is recallable from
+        the shared mp queue — no orphans to hand back)."""
+        eng = self.engine
+        with eng.lock:
+            victims = list(self._inflight.values())
+        for t in victims:
+            self.fail_task(t, "executor failure")
+        self.shutdown()
+        return []
 
     def shutdown(self):
         if not self.alive:

@@ -57,7 +57,7 @@ class _PilotView:
     pools — but it is what keeps backend queues shallow enough for the
     policy order to be the order that matters."""
 
-    __slots__ = ("pilot", "agent", "pool", "index", "nid_release")
+    __slots__ = ("pilot", "agent", "pool", "index", "nid_release", "dead")
 
     def __init__(self, pilot: Any, index: int):
         agent = getattr(pilot, "agent", pilot)
@@ -66,6 +66,7 @@ class _PilotView:
         self.index = index
         self.pool = NodePool(agent.n_nodes, agent.node_spec)
         self.nid_release = -1            # interned per-pilot release name id
+        self.dead = False                # failed pilot: excluded from placement
 
     def cost(self) -> float:
         """Estimated seconds of queueing ahead of a new release: the
@@ -116,6 +117,9 @@ class CampaignScheduler:
         self.window = max(1, window)
         self.gang_reserve = gang_reserve
         self.views: List[_PilotView] = []
+        # placement only considers live views; rebuilt by fail_pilot (index
+        # positions in self.views stay stable for trace name ids)
+        self._live: List[_PilotView] = []
         self.engine = None
         self._seq = itertools.count()
         # gangs do not queue behind loose functions: nodes>0 entries wait in
@@ -159,6 +163,7 @@ class CampaignScheduler:
             view.nid_release = self.engine.profiler.name_id(
                 f"sched:release:p{view.index}")
             self.views.append(view)
+            self._live.append(view)
             agent.add_done_callback(self._on_task_done,
                                     cohort_safe=self._cohort_safe)
             if self.admission and self.gang_reserve:
@@ -283,7 +288,7 @@ class CampaignScheduler:
                 ready.append(d)
                 out.append(d)            # placeholder, replaced below
         if ready:
-            view = min(self.views, key=lambda v: v.agent.n_unfinished)
+            view = min(self._live, key=lambda v: v.agent.n_unfinished)
             if resubmit:
                 tasks = view.agent.resubmit(ready, origin)
             else:
@@ -372,7 +377,7 @@ class CampaignScheduler:
             self._release_passthrough(released)
 
     def _release_passthrough(self, entries: List[_Entry]):
-        view = min(self.views, key=lambda v: v.agent.n_unfinished)
+        view = min(self._live, key=lambda v: v.agent.n_unfinished)
         for e in entries:
             self._entry_by_uid.pop(e.task.uid, None)
             if e.resubmit:
@@ -423,6 +428,92 @@ class CampaignScheduler:
 
     def _forget(self, uid: str):
         self._entry_by_uid.pop(uid, None)
+
+    # ------------------------------------------------------------------ faults
+    def _view_of(self, pilot) -> _PilotView:
+        if isinstance(pilot, int):
+            return self.views[pilot]
+        agent = getattr(pilot, "agent", pilot)
+        for v in self.views:
+            if v.pilot is pilot or v.agent is agent:
+                return v
+        raise ValueError(f"{self.uid}: unknown pilot {pilot!r}")
+
+    def fail_pilot(self, pilot, reason: str = "pilot failure") -> List[Task]:
+        """Pilot death: the pilot's agent evacuates every non-terminal task
+        (running work fails through the executors' kill path; queued work
+        comes back as-is) and all of it requeues here onto surviving pilots
+        — through the same admission/policy path as a first submission,
+        with ``sched:requeue`` + ``agent:resubmit`` lineage per task.
+        Requires at least one surviving pilot."""
+        engine = self.engine
+        with engine.lock:
+            view = self._view_of(pilot)
+            if view.dead:
+                return []
+            survivors = [v for v in self._live if v is not view]
+            if not survivors:
+                raise RuntimeError(
+                    f"{self.uid}: no surviving pilot to requeue onto")
+            view.dead = True
+            self._live = survivors
+            now = engine.now()
+            profiler = engine.profiler
+            p = view.pilot
+            if p is not view.agent and hasattr(p, "advance"):
+                from repro.core.pilot import PilotState
+                if p.state in (PilotState.LAUNCHING, PilotState.ACTIVE):
+                    p.advance(PilotState.FAILED, now, profiler)
+            victims = view.agent.evacuate(reason)
+            profiler.record(now, self.uid, "chaos:pilot_fail",
+                            {"pilot": view.index, "n_victims": len(victims)})
+            # admission charges against the dead view can never be credited
+            # back through _on_task_done — drop them
+            for uid in [u for u, (v, _a) in self._released.items()
+                        if v is view]:
+                del self._released[uid]
+            entries: List[_Entry] = []
+            origin = getattr(p, "uid", f"pilot{view.index}")
+            for t in victims:
+                profiler.record(now, t.uid, "sched:requeue",
+                                {"pilot": view.index, "reason": reason})
+                e = _Entry(t, next(self._seq), now, origin, True)
+                self._entry_by_uid[t.uid] = e
+                entries.append(e)
+            if self.admission:
+                for e in entries:
+                    if e.task.description.nodes:
+                        self._gangs.append(e)
+                    else:
+                        self.policy.push(e)
+                self._pass()
+            else:
+                if entries:
+                    self._release_passthrough(entries)
+            return victims
+
+    def on_node_failure(self, pilot, node: Optional[int] = None
+                        ) -> Optional[int]:
+        """Shrink a pilot's placement view after a node failure so
+        admission respects the degraded capacity. The view mirrors
+        *capacity*, not node identity (backend pools renumber per
+        partition), so when ``node`` is not a view node id the most-idle
+        stand-in is removed instead. The authoritative failure — pool
+        shrink + task kills — happens in the backend via
+        ``BaseExecutor.fail_node``; chaos drives both."""
+        engine = self.engine
+        with engine.lock:
+            v = self._view_of(pilot)
+            removed = v.pool.remove_node(
+                node if node in v.pool.free_cores else None)
+            engine.profiler.record(engine.now(), self.uid,
+                                   "sched:view_shrink",
+                                   {"pilot": v.index,
+                                    "view_node": -1 if removed is None
+                                    else removed})
+            if self.admission:
+                self._schedule_pass()
+            return removed
 
     # ------------------------------------------------------------------- pass
     def _schedule_pass(self):
@@ -532,7 +623,7 @@ class CampaignScheduler:
         """Charge the entry against the best pilot view, or return None if
         nothing fits now (gangs additionally claim a draining node set)."""
         d = e.task.description
-        views = self.views
+        views = self._live
         if d.nodes:
             return self._place_gang(e, d, no_fit)
         shape = (d.cores, d.gpus)
@@ -566,11 +657,11 @@ class CampaignScheduler:
 
     def _place_gang(self, e: _Entry, d: TaskDescription,
                     no_fit: Optional[set] = None) -> Optional[_PilotView]:
-        candidates = [v for v in self.views if v.pool.n_nodes >= d.nodes]
+        candidates = [v for v in self._live if v.pool.n_nodes >= d.nodes]
         if not candidates:
             # no pilot can ever host it: release unthrottled and let the
             # backend fail it with its usual diagnostic
-            view = max(self.views, key=lambda v: v.pool.n_nodes)
+            view = max(self._live, key=lambda v: v.pool.n_nodes)
             self._released[e.task.uid] = (view, None)
             return view
         for v in candidates:
@@ -608,12 +699,12 @@ class CampaignScheduler:
         d = e.task.description
         svc_agent = getattr(d.service, "agent", None)
         view = None
-        for v in self.views:
+        for v in self._live:
             if v.agent is svc_agent:
                 view = v
                 break
         if view is None:
-            view = min(self.views, key=lambda v: v.agent.n_unfinished)
+            view = min(self._live, key=lambda v: v.agent.n_unfinished)
         alloc = view.pool.alloc(d)       # None: backend queues it (uncharged)
         self._released[e.task.uid] = (view, alloc)
         self._hand_over(view, [e], self.engine.now())
@@ -628,7 +719,7 @@ class CampaignScheduler:
             return
         d = e.task.description
         best = None
-        for v in self.views:
+        for v in self._live:
             spec = v.pool.spec
             if d.cores <= spec.cores and d.gpus <= spec.gpus:
                 best = v

@@ -1,0 +1,391 @@
+"""Fault-model tests (repro.faults): NodePool double-free guard, retry
+backoff + jitter, per-task walltime enforcement and checkpoint-aware
+restart on both engines, node loss mid-DAG with gang re-placement, pilot
+failure with requeue to survivors, and fault analytics from the trace."""
+import time
+
+import pytest
+
+from repro.core.agent import Agent, SimEngine
+from repro.core.analytics import fault_metrics
+from repro.core.pilot import PilotDescription, PilotState
+from repro.core.resources import DoubleFreeError, NodePool, NodeSpec
+from repro.core.task import TaskDescription, TaskState
+from repro.faults import ChaosController, FaultEvent, FaultPlan
+from repro.runtime import PilotManager, Session, TaskManager
+from repro.sched import CampaignScheduler
+
+
+# ------------------------------------------------------------- double free
+def test_nodepool_double_free_raises():
+    pool = NodePool(2, NodeSpec(cores=8))
+    alloc = pool.alloc(TaskDescription(cores=4))
+    assert alloc is not None
+    pool.free(alloc)
+    with pytest.raises(DoubleFreeError):
+        pool.free(alloc)
+    assert pool.double_frees == 1
+    # the first free really returned the cores; the second changed nothing
+    assert sum(pool.free_cores.values()) == 16
+
+
+def test_free_after_node_failure_does_not_resurrect_capacity():
+    """Fail-during-release interleaving: a task's node fails while the
+    task still holds an allocation on it. The late free must not add the
+    lost node's cores back to the pool."""
+    pool = NodePool(2, NodeSpec(cores=8))
+    alloc = pool.alloc(TaskDescription(cores=8))     # fills one node
+    node = next(iter(alloc.node_cores))
+    removed = pool.remove_node(node)
+    assert removed == node
+    assert pool.n_nodes == 1
+    pool.free(alloc)                                 # node is lost: skipped
+    assert node not in pool.free_cores
+    assert sum(pool.free_cores.values()) == 8
+    with pytest.raises(DoubleFreeError):
+        pool.free(alloc)
+
+
+def test_remove_node_prefers_most_idle():
+    pool = NodePool(2, NodeSpec(cores=8))
+    busy = pool.alloc(TaskDescription(cores=6))
+    busy_node = next(iter(busy.node_cores))
+    removed = pool.remove_node()
+    assert removed is not None and removed != busy_node
+
+
+# ---------------------------------------------------------- retry backoff
+def _walltime_victim(**kw):
+    # duration >> walltime and no checkpointing: every attempt is killed,
+    # so the retry chain runs to exhaustion
+    return TaskDescription(cores=4, duration=30.0, walltime=5.0, **kw)
+
+
+def test_retry_backoff_exponential_with_cap():
+    eng = SimEngine(seed=0)
+    agent = Agent(eng, 2, {"flux": {"partitions": 1}},
+                  retry_backoff=2.0, retry_backoff_max=5.0)
+    agent.start()
+    task = agent.submit([_walltime_victim(max_retries=3)])[0]
+    agent.run_until_complete()
+    assert task.state is TaskState.FAILED
+    retries = eng.profiler.by_name("agent:retry")
+    assert [e.data["delay"] for e in retries] == [2.0, 4.0, 5.0]
+    assert all(e.data["cause"] == "walltime" for e in retries)
+    # the delay is real: attempt n+1 starts >= delay after the kill
+    kills = eng.profiler.times("task:walltime")
+    assert len(kills) == 4
+    assert kills[1] - kills[0] >= 5.0 + 2.0
+
+
+def test_retry_jitter_spreads_delays():
+    eng = SimEngine(seed=3)
+    agent = Agent(eng, 2, {"flux": {"partitions": 1}},
+                  retry_backoff=2.0, retry_jitter=0.5)
+    agent.start()
+    agent.submit([_walltime_victim(max_retries=2)])
+    agent.run_until_complete()
+    delays = [e.data["delay"] for e in eng.profiler.by_name("agent:retry")]
+    assert len(delays) == 2
+    assert all(2.0 * 2 ** n <= d <= 2.0 * 2 ** n * 1.5
+               for n, d in enumerate(delays))
+
+
+def test_backoff_zero_requeues_synchronously_and_draws_no_rng():
+    """Satellite guarantee: backoff=0 keeps the seed's immediate-requeue
+    path — no scheduled delay, no RNG perturbation from jitter."""
+    eng = SimEngine(seed=1)
+    agent = Agent(eng, 2, {"flux": {"partitions": 1}})   # defaults: 0.0
+    agent.start()
+    state = eng.rng.getstate()
+    assert agent._retry_delay(1) == 0.0
+    assert agent._retry_delay(7) == 0.0
+    assert eng.rng.getstate() == state
+    task = agent.submit([_walltime_victim(max_retries=1)])[0]
+    agent.run_until_complete()
+    assert task.state is TaskState.FAILED
+    retries = eng.profiler.by_name("agent:retry")
+    assert [e.data["delay"] for e in retries] == [0.0]
+
+
+def test_backoff_config_is_inert_without_failures():
+    """Backoff parameters must not perturb a failure-free campaign."""
+    def done_profile(**agent_kw):
+        eng = SimEngine(seed=9)
+        agent = Agent(eng, 4, {"flux": {"partitions": 2}}, **agent_kw)
+        agent.start()
+        tasks = agent.submit([TaskDescription(cores=1 + (i % 4),
+                                              duration=3.0 + (i % 5))
+                              for i in range(200)])
+        agent.run_until_complete()
+        return [round(t.timestamps["DONE"], 9) for t in tasks]
+
+    assert done_profile() == done_profile(retry_backoff=30.0,
+                                          retry_jitter=0.5)
+
+
+# -------------------------------------------------- walltime + checkpoints
+def test_sim_walltime_banks_checkpoint_progress():
+    """duration 30, walltime 12, checkpoint every 5: two kills bank 10
+    then 20 virtual seconds, and the third attempt finishes the
+    remainder — checkpoint-resume instead of restart-from-zero."""
+    eng = SimEngine(seed=0)
+    agent = Agent(eng, 2, {"flux": {"partitions": 1}})
+    agent.start()
+    task = agent.submit([TaskDescription(
+        cores=4, duration=30.0, walltime=12.0, max_retries=3,
+        checkpoint_dir="ckpt://t0", checkpoint_period=5.0)])[0]
+    agent.run_until_complete()
+    assert task.state is TaskState.DONE
+    assert task.progress == 20.0
+    assert task.attempt == 3
+    assert len(eng.profiler.by_name("task:walltime")) == 2
+    resumes = eng.profiler.by_name("task:resume")
+    assert [e.data["progress"] for e in resumes] == [10.0, 20.0]
+
+
+def test_sim_walltime_without_checkpoints_restarts_from_zero():
+    eng = SimEngine(seed=0)
+    agent = Agent(eng, 2, {"flux": {"partitions": 1}})
+    agent.start()
+    task = agent.submit([_walltime_victim(max_retries=2)])[0]
+    agent.run_until_complete()
+    assert task.state is TaskState.FAILED
+    assert task.progress == 0.0
+    assert "walltime" in task.error
+
+
+def test_sim_funcpool_walltime_enforced():
+    eng = SimEngine(seed=0)
+    agent = Agent(eng, 1, {"funcpool": {"workers": 2}})
+    agent.start()
+    task = agent.submit([TaskDescription(
+        kind="function", duration=30.0, walltime=4.0,
+        checkpoint_dir="ckpt://f0", checkpoint_period=2.0,
+        max_retries=8)])[0]
+    agent.run_until_complete()
+    assert task.state is TaskState.DONE
+    assert len(eng.profiler.by_name("task:walltime")) >= 1
+
+
+def test_real_walltime_kills_hung_task():
+    with Session(mode="real", seed=0) as session:
+        pilot = PilotManager(session).submit_pilots(
+            PilotDescription(nodes=1, backends={"dragon": {"workers": 2}}))
+        tmgr = TaskManager(session)
+        tmgr.add_pilots(pilot)
+        task = tmgr.submit_tasks(TaskDescription(
+            kind="function", fn=lambda: time.sleep(5.0), walltime=0.25))
+        assert tmgr.wait_tasks(timeout=10)
+        assert task.state is TaskState.FAILED
+        assert "walltime exceeded" in task.error
+        assert len(session.profiler.by_name("task:walltime")) == 1
+
+
+def test_real_checkpoint_resume_contract(tmp_path):
+    """A crashing task resumes from its latest checkpoint on retry: the
+    runtime injects a CheckpointManager + resume step into callables that
+    declare the keywords."""
+    np = pytest.importorskip("numpy")
+    pytest.importorskip("jax")
+    seen = []
+
+    def trainer(checkpoint=None, resume_from=None):
+        seen.append(resume_from)
+        start = 0 if resume_from is None else resume_from + 1
+        for step in range(start, 3):
+            checkpoint.save(step, {"w": np.full(4, float(step))})
+        if resume_from is None:
+            raise RuntimeError("simulated crash")
+        return resume_from
+
+    with Session(mode="real", seed=0) as session:
+        pilot = PilotManager(session).submit_pilots(
+            PilotDescription(nodes=1, backends={"dragon": {"workers": 2}}))
+        tmgr = TaskManager(session)
+        tmgr.add_pilots(pilot)
+        task = tmgr.submit_tasks(TaskDescription(
+            kind="function", fn=trainer, max_retries=1,
+            checkpoint_dir=str(tmp_path / "ckpt")))
+        assert tmgr.wait_tasks(timeout=30)
+        assert task.state is TaskState.DONE
+        assert seen == [None, 2]
+        assert task.result == 2
+        resumes = session.profiler.by_name("task:resume")
+        assert len(resumes) == 1 and resumes[0].data["progress"] == 2
+
+
+# --------------------------------------------------------- node loss / DAG
+def test_sim_node_loss_mid_dag_with_gang():
+    """Satellite: a campaign with `after` deps and a gang stage loses
+    nodes mid-stage — downstream deps still release, the gang re-places on
+    surviving whole nodes, and nothing is left stranded non-terminal."""
+    with Session(mode="sim", seed=0) as session:
+        pilot = PilotManager(session).submit_pilots(
+            PilotDescription(nodes=6, backends={"flux": {"partitions": 2}}),
+            retry_backoff=1.0)
+        sched = CampaignScheduler(policy="fifo", admission=True)
+        tmgr = TaskManager(session, scheduler=sched)
+        tmgr.add_pilots(pilot)
+        stage_a = [TaskDescription(cores=28, duration=20.0, max_retries=4,
+                                   uid=f"fa.{i}") for i in range(8)]
+        gang = TaskDescription(nodes=2, duration=10.0, max_retries=4,
+                               uid="fgang",
+                               after=tuple(d.uid for d in stage_a))
+        tail = TaskDescription(cores=1, duration=2.0, max_retries=4,
+                               uid="ftail", after=("fgang",))
+        chaos = ChaosController(
+            sched, FaultPlan([FaultEvent(5.0, "node"),
+                              FaultEvent(7.0, "node")]), seed=11)
+        chaos.arm()
+        tasks = tmgr.submit_tasks(stage_a + [gang, tail])
+        assert tmgr.wait_tasks(timeout=60)
+        assert all(t.state is TaskState.DONE for t in tasks), \
+            [(t.uid, t.state) for t in tasks if t.state is not TaskState.DONE]
+        st = chaos.stats()
+        assert st["node_failures"] == 2
+        names = session.profiler.counts_by_name()
+        assert names.get("sched:view_shrink") == 2
+        # the gang ran after every stage-a dependency completed
+        gang_task = next(t for t in tasks if t.uid == "fgang")
+        dep_done = max(t.timestamps["DONE"] for t in tasks
+                       if t.uid.startswith("fa."))
+        assert gang_task.timestamps["RUNNING"] >= dep_done
+
+
+def test_real_node_loss_mid_dag():
+    with Session(mode="real", seed=0) as session:
+        pilot = PilotManager(session).submit_pilots(
+            PilotDescription(nodes=2, backends={"flux": {"partitions": 4}}),
+            retry_backoff=0.05)
+        sched = CampaignScheduler(policy="fifo", admission=True)
+        tmgr = TaskManager(session, scheduler=sched)
+        tmgr.add_pilots(pilot)
+        head = [TaskDescription(kind="function",
+                                fn=lambda: time.sleep(0.05) or "ok",
+                                max_retries=3, uid=f"rh.{i}")
+                for i in range(8)]
+        tail = TaskDescription(kind="function", fn=lambda: "tail",
+                               max_retries=3, uid="rtail",
+                               after=tuple(d.uid for d in head))
+        chaos = ChaosController(
+            sched, FaultPlan([FaultEvent(0.06, "node")]), seed=5)
+        chaos.arm()
+        tasks = tmgr.submit_tasks(head + [tail])
+        assert tmgr.wait_tasks(timeout=30)
+        assert all(t.state is TaskState.DONE for t in tasks)
+        assert chaos.stats()["node_failures"] == 1
+        assert len(session.profiler.by_name("sched:view_shrink")) == 1
+
+
+# ------------------------------------------------------------ pilot faults
+@pytest.mark.parametrize("admission", [True, False])
+def test_sim_pilot_failure_requeues_to_survivor(admission):
+    with Session(mode="sim", seed=0) as session:
+        pilots = PilotManager(session).submit_pilots(
+            [PilotDescription(nodes=4, backends={"flux": {"partitions": 1}}),
+             PilotDescription(nodes=4,
+                              backends={"flux": {"partitions": 1}})])
+        sched = CampaignScheduler(policy="fifo", admission=admission)
+        tmgr = TaskManager(session, scheduler=sched)
+        tmgr.add_pilots(pilots)
+        chaos = ChaosController(
+            sched, FaultPlan([FaultEvent(15.0, "pilot", pilot=0)]), seed=0)
+        chaos.arm()
+        tasks = tmgr.submit_tasks([TaskDescription(cores=28, duration=10.0)
+                                   for _ in range(40)])
+        assert tmgr.wait_tasks(timeout=120)
+        assert all(t.state is TaskState.DONE for t in tasks)     # zero lost
+        assert pilots[0].state is PilotState.FAILED
+        assert chaos.stats()["pilot_failures"] == 1
+        requeues = session.profiler.by_name("sched:requeue")
+        assert requeues and all(e.data["pilot"] == 0 for e in requeues)
+        # the dead pilot's agent drained: nothing stranded there
+        assert pilots[0].agent.n_unfinished == 0
+
+
+def test_real_pilot_failure_requeues_to_survivor():
+    with Session(mode="real", seed=0) as session:
+        pilots = PilotManager(session).submit_pilots(
+            [PilotDescription(nodes=1, backends={"dragon": {"workers": 2}}),
+             PilotDescription(nodes=1,
+                              backends={"dragon": {"workers": 2}})])
+        sched = CampaignScheduler(policy="fifo", admission=False)
+        tmgr = TaskManager(session, scheduler=sched)
+        tmgr.add_pilots(pilots)
+        chaos = ChaosController(
+            sched, FaultPlan([FaultEvent(0.15, "pilot", pilot=0)]), seed=0)
+        chaos.arm()
+        tasks = tmgr.submit_tasks(
+            [TaskDescription(kind="function",
+                             fn=lambda x=i: time.sleep(0.02) or x)
+             for i in range(30)])
+        assert tmgr.wait_tasks(timeout=30)
+        assert all(t.state is TaskState.DONE for t in tasks)
+        assert sorted(t.result for t in tasks) == list(range(30))
+        assert len(session.profiler.by_name("chaos:pilot_fail")) == 1
+
+
+def test_last_pilot_is_never_killed():
+    with Session(mode="sim", seed=0) as session:
+        pilot = PilotManager(session).submit_pilots(
+            PilotDescription(nodes=2, backends={"flux": {"partitions": 1}}))
+        sched = CampaignScheduler(policy="fifo")
+        tmgr = TaskManager(session, scheduler=sched)
+        tmgr.add_pilots(pilot)
+        chaos = ChaosController(
+            sched, FaultPlan([FaultEvent(1.0, "pilot")]), seed=0)
+        chaos.arm()
+        tasks = tmgr.submit_tasks([TaskDescription(cores=1, duration=5.0)
+                                   for _ in range(10)])
+        assert tmgr.wait_tasks(timeout=30)
+        assert all(t.state is TaskState.DONE for t in tasks)
+        assert chaos.skipped == 1
+        assert chaos.stats()["pilot_failures"] == 0
+
+
+# -------------------------------------------------------------- fault plan
+def test_fault_plan_generators_are_seeded():
+    a = FaultPlan.node_loss(256, 0.10, 1000.0, seed=4)
+    b = FaultPlan.node_loss(256, 0.10, 1000.0, seed=4)
+    assert len(a) == 26
+    assert [e.t for e in a] == [e.t for e in b]
+    assert all(0.0 < e.t <= 1000.0 and e.kind == "node" for e in a)
+    p = FaultPlan.poisson(500.0, node_mtbf=50.0, pilot_mtbf=400.0, seed=2)
+    assert all(e.t < 500.0 for e in p)
+    assert any(e.kind == "node" for e in p)
+    with pytest.raises(ValueError):
+        FaultEvent(1.0, "meteor")
+
+
+# --------------------------------------------------------------- analytics
+def test_fault_metrics_from_trace():
+    with Session(mode="sim", seed=0) as session:
+        pilots = PilotManager(session).submit_pilots(
+            [PilotDescription(nodes=4, backends={"flux": {"partitions": 1}}),
+             PilotDescription(nodes=4,
+                              backends={"flux": {"partitions": 1}})],
+            retry_backoff=1.0)
+        sched = CampaignScheduler(policy="fifo", admission=True)
+        tmgr = TaskManager(session, scheduler=sched)
+        tmgr.add_pilots(pilots)
+        chaos = ChaosController(
+            sched, FaultPlan([FaultEvent(5.0, "node"),
+                              FaultEvent(12.0, "pilot", pilot=1)]), seed=1)
+        chaos.arm()
+        tasks = tmgr.submit_tasks([TaskDescription(
+            cores=28, duration=15.0, max_retries=4,
+            checkpoint_dir=f"ckpt://m{i}", checkpoint_period=4.0)
+            for i in range(24)])
+        assert tmgr.wait_tasks(timeout=120)
+        assert all(t.state is TaskState.DONE for t in tasks)
+        m = fault_metrics(session.profiler)
+        assert m.node_failures == 1
+        assert m.pilot_failures == 1
+        assert m.tasks_requeued == len(
+            session.profiler.by_name("sched:requeue"))
+        assert m.retries_total == sum(m.retries_by_cause.values())
+        if m.checkpoint_resumes:
+            assert m.recovered_core_s > 0.0
+        d = m.as_dict()
+        assert d["view_shrinks"] == 1
