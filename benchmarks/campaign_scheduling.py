@@ -35,7 +35,6 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import json
 import random
 import sys
 import time
@@ -45,6 +44,7 @@ from repro.core import calibration as CAL
 from repro.core.analytics import sched_metrics
 from repro.core.pilot import PilotDescription
 from repro.core.task import TaskDescription, TaskState
+from repro.observability import RunReport
 from repro.runtime import PilotManager, Session, TaskManager
 from repro.sched import (CampaignScheduler, FairSharePolicy, PriorityPolicy)
 
@@ -254,7 +254,7 @@ def main(argv: List[str] = None) -> int:
             failures.append(f"mean backfill improvement {mean_imp:.1%} "
                             f"below the 20% acceptance bar")
 
-    payload = {
+    RunReport(extra={
         "benchmark": "campaign_scheduling",
         "protocol": ("heterogeneous synthetic campaign at 256 sim nodes "
                      "(flux x4 partitions): a saturating 1-core function "
@@ -272,11 +272,8 @@ def main(argv: List[str] = None) -> int:
         "seed": args.seed,
         "backfill_vs_fifo_improvement": [round(i, 4)
                                          for i in improvements],
-        "results": results,
         "failures": failures,
-    }
-    with open(args.output, "w") as f:
-        json.dump(payload, f, indent=2)
+    }, results=results).save(args.output)
     print(f"wrote {args.output}")
     if failures:
         print("FAILURES:\n  " + "\n  ".join(failures), file=sys.stderr)

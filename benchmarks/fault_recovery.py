@@ -26,7 +26,6 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 import time
 from typing import Dict, List
@@ -35,6 +34,7 @@ from repro.core.analytics import fault_metrics
 from repro.core.pilot import PilotDescription
 from repro.core.task import TaskDescription, TaskState
 from repro.faults import ChaosController, FaultEvent, FaultPlan
+from repro.observability import RunReport
 from repro.runtime import PilotManager, Session, TaskManager
 from repro.sched import CampaignScheduler
 
@@ -201,7 +201,7 @@ def main(argv: List[str] = None) -> int:
                  and pilot["n_lost"] == 0 and real["n_lost"] == 0)
     resume_wins = resume["makespan_s"] < restart["makespan_s"]
     ok = zero_lost and resume_wins
-    payload = {
+    RunReport(extra={
         "benchmark": "fault_recovery",
         "protocol": ("sim: a 256-node two-pilot campaign loses "
                      f"{args.loss:.0%} of its nodes at seeded-random times; "
@@ -218,9 +218,7 @@ def main(argv: List[str] = None) -> int:
         "acceptance_pass": ok,
         "sim": [restart, resume, pilot],
         "real": [real],
-    }
-    with open(args.output, "w") as f:
-        json.dump(payload, f, indent=2)
+    }).save(args.output)
     print(f"wrote {args.output} (acceptance_pass={ok})")
     return 0 if ok else 1
 

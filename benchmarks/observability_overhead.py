@@ -1,0 +1,184 @@
+"""Observability overhead benchmark: what does watching the run cost?
+
+Two passes over the same seeded 1M-task null campaign (the
+throughput_scale flux-x8 configuration, whose committed wall time in
+``BENCH_runtime.json`` is the regression baseline):
+
+* **off** — campaign only, nothing derived after the drain;
+* **on**  — campaign with a LiveSampler attached (trace recording is
+  always on), then the full post-hoc stack: RunReport.collect (all
+  metric families + lifecycle breakdown + reconstructed timeseries)
+  plus a capped Chrome trace export, each stage timed.
+
+Gates (exit nonzero on miss):
+
+* the *observed campaign* wall (drain with live sampling active) <=
+  1.10 x the committed BENCH_runtime.json wall for the same
+  (config, n_tasks) tier — watching the run live must fit inside the
+  same 10% band the campaign itself is held to;
+* post-hoc analysis (RunReport.collect) < 2s at 1M tasks.
+
+Usage:
+    PYTHONPATH=src python benchmarks/observability_overhead.py          # 10k + 1M
+    PYTHONPATH=src python benchmarks/observability_overhead.py --quick  # CI: same
+    PYTHONPATH=src python benchmarks/observability_overhead.py --scales 10000
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+from typing import Dict, List, Optional
+
+from repro.core.pilot import PilotDescription
+from repro.core.task import TaskDescription
+from repro.observability import LiveSampler, RunReport, export_chrome_trace
+from repro.runtime import PilotManager, Session, TaskManager
+
+DEFAULT_SCALES = (10_000, 1_000_000)
+NODES = 64
+ANALYSIS_GATE_S = 2.0
+WALL_BAND = 1.10
+
+
+def run_campaign(n_tasks: int, seed: int, observe: bool) -> Dict:
+    """One flux-x8 null campaign (throughput_scale protocol); with
+    ``observe`` a LiveSampler rides the drain and the full post-hoc
+    stack runs afterwards, every stage timed individually."""
+    t0 = time.time()
+    with Session(mode="sim", seed=seed) as session:
+        pilot = PilotManager(session).submit_pilots(
+            PilotDescription(nodes=NODES,
+                             backends={"flux": {"partitions": 8}}))
+        tmgr = TaskManager(session)
+        tmgr.add_pilots(pilot)
+        tmgr.submit_tasks([TaskDescription(cores=1, duration=0.0)
+                           for _ in range(n_tasks)])
+        sampler = None
+        if observe:
+            sampler = LiveSampler(pilot.agent, interval=1.0).start()
+        tmgr.wait_tasks()
+        campaign_wall = time.time() - t0
+        out: Dict = {"config": "flux x8", "n_tasks": n_tasks,
+                     "campaign_wall_s": round(campaign_wall, 3)}
+        if not observe:
+            out["wall_s"] = round(campaign_wall, 3)
+            return out
+        out["live_samples"] = len(sampler.samples)
+        agent = pilot.agent
+        tasks = agent.all_tasks()
+        t1 = time.time()
+        report = RunReport.collect(tasks, agent.total_cores,
+                                   profiler=session.profiler)
+        analysis_s = time.time() - t1
+        t2 = time.time()
+        fd, trace_path = tempfile.mkstemp(suffix=".json")
+        os.close(fd)
+        try:
+            summary = export_chrome_trace(trace_path, tasks,
+                                          session.profiler,
+                                          total_cores=agent.total_cores)
+            trace_bytes = os.path.getsize(trace_path)
+        finally:
+            os.unlink(trace_path)
+        export_s = time.time() - t2
+        out.update({
+            "wall_s": round(time.time() - t0, 3),
+            "analysis_wall_s": round(analysis_s, 3),
+            "export_wall_s": round(export_s, 3),
+            "export_slices": summary["n_slices"],
+            "export_slices_dropped": summary["n_slices_dropped"],
+            "export_file_bytes": trace_bytes,
+            "cost": report.cost,
+            "breakdown_exec_share": _exec_share(report),
+        })
+        return out
+
+
+def _exec_share(report: RunReport) -> float:
+    total = report.breakdown["total"]
+    span = total["span_sum"] or 1.0
+    return round(total["phases"]["exec"]["sum"] / span, 4)
+
+
+def _runtime_baseline(path: str) -> Dict:
+    """(config, n_tasks) -> wall_s from the committed BENCH_runtime.json."""
+    out: Dict = {}
+    try:
+        with open(path) as f:
+            for b in json.load(f).get("results", []):
+                out[(b["config"], b["n_tasks"])] = b["wall_s"]
+    except (OSError, ValueError, KeyError):
+        pass
+    return out
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI tier (same scales as the default run)")
+    ap.add_argument("--scales", type=int, nargs="+", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--runtime-baseline", default="BENCH_runtime.json",
+                    help="committed throughput_scale results; the obs-on "
+                         "wall must stay within the 10%% band of these")
+    ap.add_argument("--no-regress-check", action="store_true")
+    ap.add_argument("--output", default="BENCH_observability.json")
+    args = ap.parse_args(argv)
+    scales = tuple(args.scales) if args.scales else DEFAULT_SCALES
+
+    baseline = _runtime_baseline(args.runtime_baseline)
+    failures: List[str] = []
+    results: List[Dict] = []
+    for n in scales:
+        off = run_campaign(n, args.seed, observe=False)
+        on = run_campaign(n, args.seed, observe=True)
+        r = {**on, "campaign_only_wall_s": off["wall_s"],
+             "obs_overhead_s": round(on["wall_s"] - off["wall_s"], 3)}
+        base = baseline.get((r["config"], n))
+        if base is not None:
+            r["runtime_baseline_wall_s"] = base
+            if (not args.no_regress_check and n >= 1_000_000
+                    and r["campaign_wall_s"] > WALL_BAND * base):
+                failures.append(
+                    f"observed campaign wall at n={n:,}: "
+                    f"{r['campaign_wall_s']:.2f}s exceeds "
+                    f"{WALL_BAND:.0%} of the committed runtime baseline "
+                    f"{base:.2f}s")
+        if n >= 1_000_000 and r["analysis_wall_s"] > ANALYSIS_GATE_S:
+            failures.append(
+                f"analysis at n={n:,} took {r['analysis_wall_s']:.2f}s "
+                f"(gate {ANALYSIS_GATE_S:.1f}s)")
+        results.append(r)
+        print(f"n={n:>9,}  campaign={r['campaign_only_wall_s']:>7.2f}s  "
+              f"observed={r['campaign_wall_s']:>7.2f}s  "
+              f"analysis={r['analysis_wall_s']:>6.3f}s  "
+              f"export={r['export_wall_s']:>6.3f}s  "
+              f"events/task={r['cost']['events_per_task']}", flush=True)
+
+    RunReport(extra={
+        "benchmark": "observability_overhead",
+        "protocol": ("two passes per scale over the seeded throughput_scale "
+                     "flux-x8 null campaign: campaign-only wall vs campaign "
+                     "with LiveSampler + RunReport.collect + capped Chrome "
+                     "export; the observed campaign wall is gated to 110% "
+                     "of the committed BENCH_runtime wall, post-hoc "
+                     "analysis gated to <2s at 1M"),
+        "nodes": NODES,
+        "seed": args.seed,
+        "analysis_gate_s": ANALYSIS_GATE_S,
+        "wall_band": WALL_BAND,
+    }, results=results).save(args.output)
+    print(f"wrote {args.output}")
+    if failures:
+        for msg in failures:
+            print(f"FAIL: {msg}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

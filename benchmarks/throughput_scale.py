@@ -27,6 +27,7 @@ from repro.core.analytics import (compute_metrics, concurrency_series,
                                   occupancy_utilization)
 from repro.core.pilot import PilotDescription
 from repro.core.task import TaskDescription
+from repro.observability import RunReport
 from repro.runtime import PilotManager, Session, TaskManager
 
 DEFAULT_SCALES = (10_000, 100_000, 1_000_000)
@@ -157,7 +158,7 @@ def main(argv: List[str] = None) -> int:
               f"sim-events/s={r['sim_events_per_s']:>8,}  "
               f"rss={r['peak_rss_mb']:.0f}MB", flush=True)
 
-    payload = {
+    RunReport(extra={
         "benchmark": "throughput_scale",
         "protocol": ("end-to-end per scale: build TaskDescriptions, submit "
                      "via Session/TaskManager, drain the sim engine, "
@@ -165,10 +166,7 @@ def main(argv: List[str] = None) -> int:
                      "per scale, single process"),
         "nodes": NODES,
         "seed": args.seed,
-        "results": results,
-    }
-    with open(args.output, "w") as f:
-        json.dump(payload, f, indent=2)
+    }, results=results).save(args.output)
     print(f"wrote {args.output}")
     if failures:
         for msg in failures:

@@ -453,37 +453,45 @@ def fault_metrics(profiler) -> FaultMetrics:
     columnar trace. ``recovered_core_s`` is the core-seconds of work that
     checkpoint-resume did *not* redo: each ``task:resume`` event carries
     the progress (seconds of work already banked) and core width of the
-    resuming attempt."""
+    resuming attempt. Event names resolve through the recording modules'
+    trace-name registries (``repro.faults.chaos.TRACE_NAMES``,
+    ``repro.sched.scheduler.TRACE_NAMES``), not hardcoded strings."""
+    from repro.faults.chaos import TRACE_NAMES as CHAOS
+    from repro.sched.scheduler import TRACE_NAMES as SCHED
+
+    # the vectorized per-name scan (rows_np/iter_name), not rows_by_name:
+    # the fault names have ~0..k rows, and extending the whole-trace list
+    # index just to count them costs O(all rows) on million-task traces
     def count(name: str) -> int:
-        return len(profiler.rows_by_name(name))
+        return len(profiler.rows_np(name))
 
     killed = 0
-    for ev in profiler.by_name("chaos:node_fail"):
+    for ev in profiler.iter_name(CHAOS["node_fail"]):
         killed += int((ev.data or {}).get("n_victims", 0))
-    for ev in profiler.by_name("chaos:pilot_fail"):
+    for ev in profiler.iter_name(CHAOS["pilot_fail"]):
         killed += int((ev.data or {}).get("n_victims", 0))
     by_cause: Dict[str, int] = {}
-    for ev in profiler.by_name("agent:retry"):
+    for ev in profiler.iter_name("agent:retry"):
         cause = (ev.data or {}).get("cause", "task")
         by_cause[cause] = by_cause.get(cause, 0) + 1
     recovered = 0.0
     n_resumes = 0
-    for ev in profiler.by_name("task:resume"):
+    for ev in profiler.iter_name("task:resume"):
         n_resumes += 1
         d = ev.data or {}
         recovered += float(d.get("progress", 0.0)) * max(
             1, int(d.get("cores", 1)))
     return FaultMetrics(
-        node_failures=count("chaos:node_fail"),
-        pilot_failures=count("chaos:pilot_fail"),
+        node_failures=count(CHAOS["node_fail"]),
+        pilot_failures=count(CHAOS["pilot_fail"]),
         tasks_killed=killed,
-        tasks_requeued=count("sched:requeue"),
+        tasks_requeued=count(SCHED["requeue"]),
         retries_total=sum(by_cause.values()),
         retries_by_cause=by_cause,
         walltime_kills=count("task:walltime"),
         checkpoint_resumes=n_resumes,
         recovered_core_s=recovered,
-        view_shrinks=count("sched:view_shrink"))
+        view_shrinks=count(SCHED["view_shrink"]))
 
 
 # --------------------------------------------------------------------------

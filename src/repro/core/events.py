@@ -76,6 +76,9 @@ class Profiler:
         self._by_name: Dict[int, List[int]] = {}   # name id -> row indices
         self._indexed_rows = 0
         self._events_view: List[Event] = []
+        # name -> (rows int64 array, times float64 array|None, row count at
+        # scan time); row-count keying makes appends extend the scan lazily
+        self._np_cache: Dict[str, tuple] = {}
 
     # ------------------------------------------------------------ interning
     def entity_id(self, entity: str) -> int:
@@ -119,14 +122,20 @@ class Profiler:
         """Bulk append of payload-free events from pre-interned ids:
         ``times`` (float array-like) and ``eids`` (int array-like) must have
         equal length; ``nid`` is one name id for the whole batch or an
-        array of per-event name ids. Equivalent to a loop of
+        array of per-event name ids (same length). Equivalent to a loop of
         ``record_fast`` (golden-pinned in tests/test_cohort_golden.py) but
         two C-level bulk appends regardless of batch size."""
         times = np.ascontiguousarray(times, dtype=np.float64)
         eids = np.ascontiguousarray(eids, dtype=np.int64)
         if len(times) != len(eids):
             raise ValueError("record_fast_many: times/eids length mismatch")
-        packed = (eids << _NAME_BITS) | np.asarray(nid, dtype=np.int64)
+        nid = np.asarray(nid, dtype=np.int64)
+        if nid.ndim > 0 and len(nid) != len(times):
+            # a short nid array would otherwise broadcast (len 1) or raise
+            # deep inside numpy with an opaque shape error
+            raise ValueError("record_fast_many: nid length mismatch "
+                             f"({len(nid)} nids for {len(times)} events)")
+        packed = (eids << _NAME_BITS) | nid
         self._times.frombytes(times.tobytes())
         self._ids.frombytes(np.ascontiguousarray(packed).tobytes())
 
@@ -150,18 +159,36 @@ class Profiler:
                      self._data.get(row))
 
     def _name_index(self) -> Dict[int, List[int]]:
-        """Extend the lazy name -> rows index to cover all recorded rows."""
+        """Extend the lazy name -> rows index to cover all recorded rows.
+
+        Vectorized: the unindexed tail is masked and stably grouped in bulk
+        (``& _NAME_MASK`` + stable argsort), so the first analytics touch on
+        a 1M-row trace costs a few numpy passes instead of an O(rows)
+        interpreter loop. Semantics are unchanged — plain lists of int rows
+        in recording order per name (golden-pinned against the loop
+        implementation in tests/test_observability.py)."""
         n = len(self._times)
-        if self._indexed_rows < n:
+        lo = self._indexed_rows
+        if lo < n:
+            # transient view over the packed column; nothing numpy-side may
+            # outlive this block or later array appends would hit the
+            # exported-buffer guard
+            nids = np.frombuffer(self._ids, dtype=np.int64,
+                                 count=n)[lo:] & _NAME_MASK
+            order = np.argsort(nids, kind="stable")
+            grouped = nids[order]
+            rows = order + lo
+            cuts = np.flatnonzero(np.diff(grouped)) + 1
+            starts = np.concatenate(([0], cuts))
+            ends = np.concatenate((cuts, [len(grouped)]))
             index = self._by_name
-            ids = self._ids
-            for row in range(self._indexed_rows, n):
-                nid = ids[row] & _NAME_MASK
-                rows = index.get(nid)
-                if rows is None:
-                    index[nid] = [row]
+            for s, e in zip(starts, ends):
+                chunk = rows[s:e].tolist()
+                cur = index.get(int(grouped[s]))
+                if cur is None:
+                    index[int(grouped[s])] = chunk
                 else:
-                    rows.append(row)
+                    cur.extend(chunk)
             self._indexed_rows = n
         return self._by_name
 
@@ -178,6 +205,76 @@ class Profiler:
         times = self._times
         return [times[r] for r in self.rows_by_name(name)]
 
+    # ------------------------------------------------- numpy fast accessors
+    # These never touch the list-based by-name index: a vectorized masked
+    # scan over the packed column finds a name's rows in one numpy pass
+    # (~ms per name at 5M rows), where extending the list index would pay
+    # an O(rows) tolist conversion. Caches are keyed by the row count at
+    # scan time, so appends just extend the cached scan incrementally.
+
+    def _rows_scan(self, name: str) -> tuple:
+        nid = self._name_ids.get(name)
+        n = len(self._times)
+        if nid is None:
+            return np.empty(0, dtype=np.int64), n
+        cached = self._np_cache.get(name)
+        if cached is not None and cached[2] == n:
+            return cached[0], n
+        # transient view: nothing numpy-side outlives this method, so
+        # later array appends never hit the exported-buffer guard
+        ids = np.frombuffer(self._ids, dtype=np.int64, count=n)
+        if cached is not None:
+            lo = cached[2]
+            tail = np.flatnonzero((ids[lo:] & _NAME_MASK) == nid) + lo
+            rows = (np.concatenate((cached[0], tail)) if len(tail)
+                    else cached[0])
+        else:
+            rows = np.flatnonzero((ids & _NAME_MASK) == nid)
+        self._np_cache[name] = (rows, None, n)
+        return rows, n
+
+    def rows_np(self, name: str) -> np.ndarray:
+        """Row indices of ``name`` as an int64 array in recording order
+        (cached; treat as read-only)."""
+        return self._rows_scan(name)[0]
+
+    def eids_np(self, name: str) -> np.ndarray:
+        """Entity ids of every ``name`` row as an int64 array in recording
+        order (decode through ``entity_of``)."""
+        rows = self.rows_np(name)
+        if not len(rows):
+            return np.empty(0, dtype=np.int64)
+        ids = np.frombuffer(self._ids, dtype=np.int64,
+                            count=len(self._ids))[rows]
+        return ids >> _NAME_BITS
+
+    def has_name(self, name: str) -> bool:
+        """Whether ``name`` was ever interned (recorded or pre-registered)."""
+        return name in self._name_ids
+
+    def times_np(self, name: str) -> np.ndarray:
+        """Timestamps of ``name`` as a float64 array in recording order
+        (cached alongside ``rows_np``; treat as read-only)."""
+        rows, n = self._rows_scan(name)
+        cached = self._np_cache.get(name)
+        if cached is not None and cached[1] is not None and cached[2] == n:
+            return cached[1]
+        if len(rows):
+            # fancy indexing copies, so the frombuffer view dies here and
+            # never blocks subsequent appends
+            out = np.frombuffer(self._times, dtype=np.float64,
+                                count=n)[rows]
+        else:
+            out = np.empty(0, dtype=np.float64)
+        self._np_cache[name] = (rows, out, n)
+        return out
+
+    def iter_name(self, name: str):
+        """Iterate ``name``'s rows as :class:`Event` views without building
+        the whole-trace list index (rows come from the vectorized scan)."""
+        for row in self.rows_np(name):
+            yield self._event_at(int(row))
+
     def window(self, name: str) -> Optional[tuple]:
         ts = self.times(name)
         return (min(ts), max(ts)) if ts else None
@@ -185,6 +282,13 @@ class Profiler:
     def counts_by_name(self) -> Dict[str, int]:
         index = self._name_index()
         return {self._names[nid]: len(rows) for nid, rows in index.items()}
+
+    def nbytes(self) -> int:
+        """Storage footprint of the authoritative columns (time + packed-id
+        bytes; sparse payload dicts are excluded — the observability layer
+        reports this as trace bytes/task)."""
+        return (len(self._times) * self._times.itemsize
+                + len(self._ids) * self._ids.itemsize)
 
     # --------------------------------------------------- columnar accessors
     def time_column(self) -> array:

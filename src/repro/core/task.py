@@ -67,6 +67,11 @@ _TS_OVERWRITE = TERMINAL | {TaskState.RUNNING, TaskState.LAUNCHING,
 _STATE_KEY = {s: s.value for s in TaskState}
 _STATE_EVENT = {s: f"state:{s.value}" for s in TaskState}
 
+# public registry of the per-transition trace event names (entity = task
+# uid); the observability layer resolves state rows through this instead of
+# re-deriving the "state:*" convention
+STATE_EVENTS: Dict[TaskState, str] = dict(_STATE_EVENT)
+
 _uid_counter = itertools.count()
 
 
@@ -307,6 +312,22 @@ class TaskCohort:
     def cores_per_task(self) -> int:
         d = self.template
         return max(1, d.cores)            # nodes==0 is a cohort precondition
+
+    def timestamp_columns(self) -> Dict[str, Any]:
+        """Whole-cohort transition timestamps as float64 columns, keyed by
+        the same state names as ``Task.timestamps`` — the zero-copy surface
+        the lifecycle decomposer consumes (SCHEDULING, a scalar bulk stamp,
+        is broadcast; unplanned transitions are omitted)."""
+        import numpy as np
+        out: Dict[str, Any] = {
+            "SCHEDULING": np.full(self.n, self.sched_t)}
+        for key, col in (("QUEUED", self.queued_t),
+                         ("LAUNCHING", self.launch_t),
+                         ("RUNNING", self.run_t),
+                         ("DONE", self.done_t)):
+            if col is not None:
+                out[key] = col
+        return out
 
     def __len__(self) -> int:
         return self.n

@@ -32,6 +32,16 @@ import random
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
+# trace-name registry (entity = "chaos"): injection events recorded by the
+# controller; `chaos:pilot_fail` is recorded by CampaignScheduler.fail_pilot
+# (entity = scheduler uid) and re-exported here so the observability layer
+# has one registry per failure domain
+TRACE_NAMES: Dict[str, str] = {
+    "node_fail": "chaos:node_fail",
+    "pilot_fail": "chaos:pilot_fail",
+    "skip": "chaos:skip",
+}
+
 
 @dataclass(frozen=True)
 class FaultEvent:
@@ -171,7 +181,7 @@ class ChaosController:
     def _skip(self, ev: FaultEvent, why: str):
         self.skipped += 1
         self.engine.profiler.record(self.engine.now(), "chaos",
-                                    "chaos:skip",
+                                    TRACE_NAMES["skip"],
                                     {"kind": ev.kind, "why": why})
 
     def _fail_pilot(self, ev: FaultEvent):
@@ -197,7 +207,7 @@ class ChaosController:
             return self._skip(ev, "node not owned")
         self.sched.on_node_failure(view.index, node)
         self.engine.profiler.record(
-            self.engine.now(), "chaos", "chaos:node_fail",
+            self.engine.now(), "chaos", TRACE_NAMES["node_fail"],
             {"pilot": view.index, "backend": ex.name, "node": node,
              "n_victims": len(victims)})
         self.injected.append({"t": self.engine.now(), "kind": "node",

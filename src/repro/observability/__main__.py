@@ -1,0 +1,80 @@
+"""CLI for the observability layer.
+
+    python -m repro.observability report BENCH_observability.json
+        Render any saved RunReport / BENCH payload as the ASCII report.
+
+    python -m repro.observability demo [--tasks N] [--trace out.json]
+        Run a small null campaign on the sim engine, print its report, and
+        optionally export the Chrome trace JSON (load in Perfetto or
+        chrome://tracing).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from repro.observability.report import RunReport, render_payload
+
+
+def _cmd_report(args) -> int:
+    try:
+        with open(args.file) as fh:
+            payload = json.load(fh)
+    except (OSError, ValueError) as exc:
+        print(f"error: cannot read {args.file}: {exc}", file=sys.stderr)
+        return 1
+    print(render_payload(payload))
+    return 0
+
+
+def _cmd_demo(args) -> int:
+    from repro.core.pilot import PilotDescription
+    from repro.core.task import TaskDescription
+    from repro.runtime import PilotManager, Session, TaskManager
+    from repro.observability.export import export_chrome_trace
+
+    with Session(mode="sim", seed=args.seed) as session:
+        pilot = PilotManager(session).submit_pilots(
+            PilotDescription(nodes=8, backends={"flux": {"partitions": 4}}))
+        tmgr = TaskManager(session)
+        tmgr.add_pilots(pilot)
+        tmgr.submit_tasks([TaskDescription(cores=1, duration=args.duration)
+                           for _ in range(args.tasks)])
+        tmgr.wait_tasks()
+        agent = pilot.agent
+        report = RunReport.collect(
+            agent.all_tasks(), agent.total_cores, profiler=session.profiler,
+            extra={"title": f"demo null campaign ({args.tasks} tasks)"})
+        print(report.render())
+        if args.trace:
+            summary = export_chrome_trace(
+                args.trace, agent.all_tasks(), session.profiler,
+                total_cores=agent.total_cores)
+            print(f"\nwrote {args.trace}: {summary['n_slices']} slices, "
+                  f"{summary['n_slices_dropped']} dropped, "
+                  f"{summary['n_counter_tracks']} counter tracks")
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.observability",
+                                 description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    rp = sub.add_parser("report", help="render a saved payload")
+    rp.add_argument("file")
+    rp.set_defaults(fn=_cmd_report)
+    dm = sub.add_parser("demo", help="run + report a small null campaign")
+    dm.add_argument("--tasks", type=int, default=2000)
+    dm.add_argument("--duration", type=float, default=0.5)
+    dm.add_argument("--seed", type=int, default=0)
+    dm.add_argument("--trace", default=None,
+                    help="also export Chrome trace JSON here")
+    dm.set_defaults(fn=_cmd_demo)
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -49,6 +49,27 @@ from repro.core.task import Task, TaskDescription, TaskState, new_uid
 from repro.sched.policy import (FIFOPolicy, QueuePolicy, _Entry,
                                 make_policy)
 
+# trace-name registry: every event this scheduler records, keyed by intent
+# (entity = task uid unless noted). The observability decomposer resolves
+# scheduler rows through this dict instead of hardcoding strings;
+# ``release_name(i)`` builds the per-pilot release track name.
+TRACE_NAMES: Dict[str, str] = {
+    "hold": "sched:hold",                  # held by admission (first time)
+    "dep_hold": "sched:dep_hold",          # parked on `after` upstreams
+    "release": "sched:release",            # bulk passthrough (entity=sched)
+    "release_pilot": "sched:release:p{i}", # per-task release to pilot i
+    "requeue": "sched:requeue",            # pilot-death evacuation requeue
+    "gang_reserve": "sched:gang_reserve",  # view claim armed for a gang
+    "head_reserve": "sched:head_reserve",  # head-of-line 1-node claim
+    "view_shrink": "sched:view_shrink",    # node loss shrank a view
+    "pilot_fail": "chaos:pilot_fail",      # entity=sched uid
+}
+
+
+def release_name(index: int) -> str:
+    """Trace name of the per-pilot release track for view ``index``."""
+    return TRACE_NAMES["release_pilot"].format(i=index)
+
 
 class _PilotView:
     """Per-pilot placement model: a mirrored NodePool charged at release
@@ -155,13 +176,13 @@ class CampaignScheduler:
             if self.engine is None:
                 self.engine = agent.engine
                 profiler = self.engine.profiler
-                self._nid_hold = profiler.name_id("sched:hold")
-                self._nid_dep = profiler.name_id("sched:dep_hold")
+                self._nid_hold = profiler.name_id(TRACE_NAMES["hold"])
+                self._nid_dep = profiler.name_id(TRACE_NAMES["dep_hold"])
             elif agent.engine is not self.engine:
                 raise RuntimeError(f"{self.uid}: pilots span engines")
             view = _PilotView(pilot, len(self.views))
             view.nid_release = self.engine.profiler.name_id(
-                f"sched:release:p{view.index}")
+                release_name(view.index))
             self.views.append(view)
             self._live.append(view)
             agent.add_done_callback(self._on_task_done,
@@ -300,7 +321,7 @@ class CampaignScheduler:
             if not isinstance(tasks, list):
                 # planned CohortWave: columnar, already in flight
                 engine.profiler.record(engine.now(), self.uid,
-                                       "sched:release",
+                                       TRACE_NAMES["release"],
                                        {"n": len(tasks),
                                         "pilot": view.index})
                 return tasks
@@ -308,7 +329,8 @@ class CampaignScheduler:
             for i, slot in enumerate(out):
                 if isinstance(slot, TaskDescription):
                     out[i] = next(it)
-            engine.profiler.record(engine.now(), self.uid, "sched:release",
+            engine.profiler.record(engine.now(), self.uid,
+                                   TRACE_NAMES["release"],
                                    {"n": len(tasks), "pilot": view.index})
         return out
 
@@ -465,7 +487,7 @@ class CampaignScheduler:
                 if p.state in (PilotState.LAUNCHING, PilotState.ACTIVE):
                     p.advance(PilotState.FAILED, now, profiler)
             victims = view.agent.evacuate(reason)
-            profiler.record(now, self.uid, "chaos:pilot_fail",
+            profiler.record(now, self.uid, TRACE_NAMES["pilot_fail"],
                             {"pilot": view.index, "n_victims": len(victims)})
             # admission charges against the dead view can never be credited
             # back through _on_task_done — drop them
@@ -475,7 +497,7 @@ class CampaignScheduler:
             entries: List[_Entry] = []
             origin = getattr(p, "uid", f"pilot{view.index}")
             for t in victims:
-                profiler.record(now, t.uid, "sched:requeue",
+                profiler.record(now, t.uid, TRACE_NAMES["requeue"],
                                 {"pilot": view.index, "reason": reason})
                 e = _Entry(t, next(self._seq), now, origin, True)
                 self._entry_by_uid[t.uid] = e
@@ -507,7 +529,7 @@ class CampaignScheduler:
             removed = v.pool.remove_node(
                 node if node in v.pool.free_cores else None)
             engine.profiler.record(engine.now(), self.uid,
-                                   "sched:view_shrink",
+                                   TRACE_NAMES["view_shrink"],
                                    {"pilot": v.index,
                                     "view_node": -1 if removed is None
                                     else removed})
@@ -687,7 +709,7 @@ class CampaignScheduler:
             if claim is not None:
                 self._released[e.task.uid] = (view, claim)
                 self.engine.profiler.record(
-                    self.engine.now(), e.task.uid, "sched:gang_reserve",
+                    self.engine.now(), e.task.uid, TRACE_NAMES["gang_reserve"],
                     {"nodes": d.nodes, "pilot": view.index})
                 return view
         return None
@@ -733,7 +755,7 @@ class CampaignScheduler:
         e.claim_view = best
         self._head_claimed = e
         self.engine.profiler.record(
-            self.engine.now(), e.task.uid, "sched:head_reserve",
+            self.engine.now(), e.task.uid, TRACE_NAMES["head_reserve"],
             {"pilot": best.index})
 
     def _drop_claim(self, e: _Entry):

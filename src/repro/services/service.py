@@ -57,6 +57,15 @@ from typing import Any, Callable, Dict, List, Optional
 
 from repro.core.task import Task, TaskDescription, TaskState, new_uid
 
+# trace-name registry (entity = service name): restart / autoscale events
+# recorded by the fault model, resolved by the observability layer instead
+# of hardcoded strings
+TRACE_NAMES: Dict[str, str] = {
+    "restart": "service:restart",          # replica replacement scheduled
+    "scale_up": "service:scale_up",        # autoscale provision
+    "scale_down": "service:scale_down",    # autoscale drain
+}
+
 # sentinel handed to a real replica's request queue to end its serve loop
 SVC_STOP = object()
 
@@ -389,7 +398,7 @@ class Service:
         self.restarts += 1
         self._pending_restarts += 1
         self.engine.profiler.record(self.engine.now(), self.name,
-                                    "service:restart",
+                                    TRACE_NAMES["restart"],
                                     {"of": task.uid, "n": self.restarts})
         self.engine.schedule(max(rp.delay(n_prior), 1e-6),
                              self._submit_replacement, task.uid)
@@ -525,7 +534,8 @@ class Service:
             self._scale_t.append(now)
             self._scale_delta.append(1)
             desc = self._new_desc()
-            self.engine.profiler.record(now, self.name, "service:scale_up",
+            self.engine.profiler.record(now, self.name,
+                                        TRACE_NAMES["scale_up"],
                                         {"target": self.n_replicas})
             self.submitter.resubmit([desc], origin="scale-up")
         elif (not self._stopping and per_replica < sp.down_threshold
@@ -537,7 +547,7 @@ class Service:
                 self._scale_t.append(now)
                 self._scale_delta.append(-1)
                 self.engine.profiler.record(now, self.name,
-                                            "service:scale_down",
+                                            TRACE_NAMES["scale_down"],
                                             {"target": self.n_replicas})
                 self._drain_replica(idle[-1])
 
