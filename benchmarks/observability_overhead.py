@@ -34,7 +34,7 @@ import time
 from typing import Dict, List, Optional
 
 from repro.core.pilot import PilotDescription
-from repro.core.task import TaskDescription
+from repro.core.task import DescriptionBatch, TaskDescription
 from repro.observability import LiveSampler, RunReport, export_chrome_trace
 from repro.runtime import PilotManager, Session, TaskManager
 
@@ -55,8 +55,15 @@ def run_campaign(n_tasks: int, seed: int, observe: bool) -> Dict:
                              backends={"flux": {"partitions": 8}}))
         tmgr = TaskManager(session)
         tmgr.add_pilots(pilot)
-        tmgr.submit_tasks([TaskDescription(cores=1, duration=0.0)
-                           for _ in range(n_tasks)])
+        # same payload protocol as throughput_scale: the >=1M tiers go
+        # through the columnar batch path, smaller tiers the object list
+        if n_tasks >= 1_000_000:
+            payload = DescriptionBatch.from_template(
+                TaskDescription(cores=1, duration=0.0), n_tasks)
+        else:
+            payload = [TaskDescription(cores=1, duration=0.0)
+                       for _ in range(n_tasks)]
+        tmgr.submit_tasks(payload)
         sampler = None
         if observe:
             sampler = LiveSampler(pilot.agent, interval=1.0).start()

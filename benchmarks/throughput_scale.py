@@ -26,7 +26,7 @@ from typing import Dict, List
 from repro.core.analytics import (compute_metrics, concurrency_series,
                                   occupancy_utilization)
 from repro.core.pilot import PilotDescription
-from repro.core.task import TaskDescription
+from repro.core.task import DescriptionBatch, TaskDescription
 from repro.observability import RunReport
 from repro.runtime import PilotManager, Session, TaskManager
 
@@ -43,9 +43,12 @@ def run_campaign(n_tasks: int, hybrid: bool, seed: int = 0) -> Dict:
     """One end-to-end Fig-5-style run: build descriptions, submit through
     the Session facade, drain, compute metrics. Returns the measurement.
 
-    At >=2M tasks the non-hybrid config switches to the wave API
-    (``submit_wave``): one shared template plus a reserved uid block, so
-    the 10M-task tier does not spend gigabytes on description objects."""
+    At >=1M tasks the non-hybrid config builds a columnar
+    ``DescriptionBatch.from_template`` payload (one shared template, O(1)
+    description memory per task) instead of a list of description
+    objects, so the large tiers measure the batch submission path and do
+    not spend gigabytes — or noisy seconds — on object construction.
+    The sub-1M tiers keep the object-list path covered."""
     t0 = time.time()
     if hybrid:
         # Fig 5d: mixed executable+function load over flux+dragon
@@ -58,18 +61,23 @@ def run_campaign(n_tasks: int, hybrid: bool, seed: int = 0) -> Dict:
             PilotDescription(nodes=NODES, backends=backends))
         tmgr = TaskManager(session)
         tmgr.add_pilots(pilot)
-        if not hybrid and n_tasks >= 2_000_000:
-            tmgr.submit_wave(TaskDescription(cores=1, duration=0.0), n_tasks)
+        build0 = time.perf_counter()
+        if not hybrid and n_tasks >= 1_000_000:
+            # all-scalar columnar batch: O(1) description memory per task
+            payload = DescriptionBatch.from_template(
+                TaskDescription(cores=1, duration=0.0), n_tasks)
+        elif hybrid:
+            payload = [TaskDescription(cores=1, duration=0.0,
+                                       kind="function" if i % 2
+                                       else "executable")
+                       for i in range(n_tasks)]
         else:
-            if hybrid:
-                descs = [TaskDescription(cores=1, duration=0.0,
-                                         kind="function" if i % 2
-                                         else "executable")
-                         for i in range(n_tasks)]
-            else:
-                descs = [TaskDescription(cores=1, duration=0.0)
-                         for _ in range(n_tasks)]
-            tmgr.submit_tasks(descs)
+            payload = [TaskDescription(cores=1, duration=0.0)
+                       for _ in range(n_tasks)]
+        desc_build_s = time.perf_counter() - build0
+        submit0 = time.perf_counter()
+        tmgr.submit_tasks(payload)
+        submit_s = time.perf_counter() - submit0
         tmgr.wait_tasks()
         agent = pilot.agent
         engine = session.engine
@@ -86,6 +94,14 @@ def run_campaign(n_tasks: int, hybrid: bool, seed: int = 0) -> Dict:
             "n_tasks": n_tasks,
             "wall_s": round(wall, 3),
             "tasks_per_s": round(n_tasks / wall),
+            # description build + submit-call cost, so the trajectory
+            # tracks whether the description layer (not the state
+            # machine) dominates: desc_build_s is pure construction,
+            # submit_calls_per_s is n over the submit_tasks call wall
+            # (eligibility scan / planning / stamping included)
+            "desc_build_s": round(desc_build_s, 3),
+            "submit_s": round(submit_s, 3),
+            "submit_calls_per_s": round(n_tasks / max(submit_s, 1e-9)),
             "sim_events": engine.events_fired,
             "sim_events_per_s": round(engine.events_fired / wall),
             "trace_events": len(session.profiler),
@@ -136,13 +152,15 @@ def main(argv: List[str] = None) -> int:
         prev = baseline.get((r["config"], r["n_tasks"]))
         if prev is not None:
             for k in ("wall_s", "tasks_per_s", "peak_rss_mb",
-                      "sim_events_per_s"):
+                      "sim_events_per_s", "desc_build_s",
+                      "submit_calls_per_s"):
                 if k in prev:
                     r[k + "_prev"] = prev[k]
             # enforce only at >=1M, where the cohort-path wall is long
-            # enough (~6s) for a 10% band to mean something; smaller
-            # tiers are sub-second and noise-dominated but still report
-            # their *_prev columns
+            # enough (~6s) for a 10% band to mean something; this covers
+            # the slow-lane 10M --max-rss-mb tier too once its row is in
+            # the committed baseline; smaller tiers are sub-second and
+            # noise-dominated but still report their *_prev columns
             if (not args.no_regress_check and n >= 1_000_000
                     and r["wall_s"] > 1.10 * prev["wall_s"]):
                 failures.append(
@@ -157,6 +175,15 @@ def main(argv: List[str] = None) -> int:
               f"tasks/s={r['tasks_per_s']:>7,}  "
               f"sim-events/s={r['sim_events_per_s']:>8,}  "
               f"rss={r['peak_rss_mb']:.0f}MB", flush=True)
+
+    # merge: tiers not re-measured by this invocation keep their committed
+    # rows, so the CI quick lane doesn't clobber the slow lane's 10M row
+    # (and vice versa); ru_maxrss is process-lifetime max, so the RSS-gated
+    # 10M tier is only honest standalone (--tasks 10000000)
+    measured = {(r["config"], r["n_tasks"]) for r in results}
+    results = results + [b for key, b in baseline.items()
+                         if key not in measured]
+    results.sort(key=lambda r: (r["config"], r["n_tasks"]))
 
     RunReport(extra={
         "benchmark": "throughput_scale",

@@ -23,11 +23,14 @@ import os
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional
 
+import numpy as np
+
 from repro.core import calibration as CAL
 from repro.core import cohort as _cohort
 from repro.core.executors.base import BaseExecutor
 from repro.core.resources import NodeSpec
-from repro.core.task import Task, TaskDescription, TaskState
+from repro.core.task import (DescriptionBatch, DescView, Task,
+                             TaskDescription, TaskState, _STATE_EVENT)
 from repro.runtime.engine import Engine, RealEngine, SimEngine  # noqa: F401
 from repro.runtime.registry import create_executor
 
@@ -265,16 +268,25 @@ class Agent:
         self.ready_at = max(ex.ready_at for ex in self.backends.values())
 
     # ---------------------------------------------------------------- submit
-    def submit(self, descriptions: List[TaskDescription],
-               cohort: Optional[bool] = None):
-        """Submit a bulk of task descriptions. Returns a list of ``Task``
-        objects — or, when the bulk is large and homogeneous enough for the
-        vectorized cohort path (see ``repro.core.cohort``), a
-        :class:`repro.core.task.CohortWave` (same iteration surface, lazy
-        per-task views). ``cohort=False`` forces the object path for this
-        call."""
+    def submit(self, descriptions, cohort: Optional[bool] = None):
+        """Submit a bulk of task descriptions — a ``List[TaskDescription]``
+        or a columnar :class:`~repro.core.task.DescriptionBatch`. Returns a
+        list of ``Task`` objects — or, when the bulk is large and
+        homogeneous enough for the vectorized cohort path (see
+        ``repro.core.cohort``), a :class:`repro.core.task.CohortWave` (same
+        iteration surface, lazy per-task views). Batches always try the
+        cohort planner (a batch is an explicit bulk, like ``submit_wave``);
+        lists only at ``cohort_min`` size. ``cohort=False`` forces the
+        object path for this call."""
         use_cohort = self._cohort if cohort is None else (self._cohort
                                                           and cohort)
+        if isinstance(descriptions, DescriptionBatch):
+            if use_cohort:
+                with self.engine.lock:
+                    wave = _cohort.try_plan_batch(self, descriptions)
+                if wave is not None:
+                    return wave
+            return self._submit_batch_objects(descriptions)
         if use_cohort and len(descriptions) >= self._cohort_min:
             with self.engine.lock:
                 wave = _cohort.try_plan(self, descriptions)
@@ -306,11 +318,61 @@ class Agent:
                     gc.enable()
         return out
 
-    def submit_prepared(self, prepared: List[Task]) -> List[Task]:
+    def _submit_batch_objects(self, batch: DescriptionBatch) -> List[Task]:
+        """Object-path ingestion of a batch: one ``Task`` per row over a
+        lazy :class:`DescView` (no description objects), with the whole
+        bulk's SCHEDULING transition stamped via one entity-block
+        reservation plus one ``record_fast_many`` — no per-task trace
+        appends, no per-task uid interning."""
+        engine = self.engine
+        n = batch.n
+        out: List[Task] = []
+        with engine.lock:
+            gc_was_enabled = gc.isenabled()
+            if gc_was_enabled:
+                gc.disable()
+            try:
+                now = engine.now()
+                profiler = engine.profiler
+                tasks = self.tasks
+                append = self._dispatch_q.append
+                base = profiler.reserve_entities(n, batch.uid)
+                st = TaskState.SCHEDULING
+                nids = profiler.memo_nids
+                nid = nids.get(st)
+                if nid is None:
+                    nid = nids[st] = profiler.name_id(_STATE_EVENT[st])
+                profiler.reserve_rows(n)
+                profiler.record_fast_many(
+                    np.full(n, now),
+                    np.arange(base, base + n, dtype=np.int64), nid)
+                view = batch.view
+                for i in range(n):
+                    task = Task(view(i))
+                    task.state = st
+                    task.timestamps["SCHEDULING"] = now
+                    task._trace_prof = profiler
+                    task._trace_eid = base + i
+                    tasks[task.uid] = task
+                    append(task)
+                    out.append(task)
+                self._pump_dispatch()
+            finally:
+                if gc_was_enabled:
+                    gc.enable()
+        return out
+
+    def submit_prepared(self, prepared) -> List[Task]:
         """Ingest Task objects built (and possibly held) by a campaign
         scheduler (repro.sched). Tasks already advanced to SCHEDULING at
         scheduler admission keep that timestamp — their measured wait
-        covers the scheduler hold, not just the dispatch queue."""
+        covers the scheduler hold, not just the dispatch queue. A
+        :class:`DescriptionBatch` is accepted too: its rows enter as fresh
+        object tasks (bulk-stamped SCHEDULING now), bypassing the cohort
+        planner — prepared submission implies the caller already did
+        admission."""
+        if isinstance(prepared, DescriptionBatch):
+            return self._submit_batch_objects(prepared)
         engine = self.engine
         with engine.lock:
             gc_was_enabled = gc.isenabled()
@@ -334,17 +396,15 @@ class Agent:
 
     def submit_wave(self, template: TaskDescription, n: int):
         """Submit ``n`` clones of ``template`` without materializing ``n``
-        descriptions: the cohort planner shares the template and reserves a
-        uid block, so per-task submit cost is O(1) memory. Falls back to
-        materialized descriptions on the object path when the wave is not
-        cohort-eligible. Returns a ``CohortWave`` or a list of tasks."""
-        if self._cohort:
-            with self.engine.lock:
-                wave = _cohort.try_plan_wave(self, template, n)
-            if wave is not None:
-                return wave
-        descs = [dataclasses.replace(template, uid="") for _ in range(n)]
-        return self.submit(descs, cohort=False)
+        descriptions: the wave is one all-scalar ``DescriptionBatch``
+        (every column a shared scalar, uids a reserved block), planned
+        closed-form by the cohort planner when eligible and ingested as
+        object tasks over lazy row views otherwise — O(1) memory per task
+        at submit either way. Returns a ``CohortWave`` or a list of
+        tasks."""
+        if n <= 0:
+            return []
+        return self.submit(DescriptionBatch.from_template(template, n))
 
     def resubmit(self, descriptions: List[TaskDescription],
                  origin: str = "") -> List[Task]:
@@ -627,8 +687,10 @@ class Agent:
                 # not yet running: re-arm
                 self.engine.schedule(deadline, watchdog)
                 return
-            import dataclasses
-            d2 = dataclasses.replace(task.description, uid="")
+            d = task.description
+            if isinstance(d, DescView):
+                d = d.materialize()      # batch rows are read-only views
+            d2 = dataclasses.replace(d, uid="")
             clone = Task(d2)
             clone.speculative_of = task.uid
             self.tasks[clone.uid] = clone

@@ -150,14 +150,15 @@ def compute_metrics(tasks: Sequence[Task], total_cores: int,
 
     overhead = start_min - t0
 
-    # peak concurrency: prefix-sum sweep over (time, +-1) events; lexsort
-    # keys replicate the reference tuple ordering (ends before starts at
-    # equal timestamps)
-    times = np.concatenate([starts_unsorted, ends])
-    deltas = np.concatenate([np.ones(n_done, np.int64),
-                             -np.ones(n_done, np.int64)])
-    order = np.lexsort((deltas, times))
-    peak = int(np.cumsum(deltas[order]).max())
+    # peak concurrency: always attained right after a start event, and the
+    # reference tuple ordering processes ends before starts at equal
+    # timestamps — so running-after-start-i is (i+1) minus the ends that
+    # sorted no later (side="right"). Two searchsorted passes instead of
+    # the 2n-element lexsort + cumsum sweep.
+    ends_sorted = np.sort(ends)
+    running = (np.arange(1, n_done + 1)
+               - np.searchsorted(ends_sorted, starts, side="right"))
+    peak = int(running.max())
 
     return RunMetrics(n_total, n_done, n_failed, makespan,
                       thr_avg, thr_peak, min(1.0, util), overhead, peak)
@@ -227,13 +228,12 @@ def concurrency_series(tasks: Sequence[Task], dt: float = 10.0
         ends_arrays.append(c.done_t)
     if not starts_arrays:
         return []
-    n = sum(len(a) for a in starts_arrays)
-    times = np.concatenate(starts_arrays + ends_arrays)
-    deltas = np.concatenate([np.ones(n, np.int64), -np.ones(n, np.int64)])
-    order = np.lexsort((deltas, times))
-    t_sorted = times[order]
-    csum = np.cumsum(deltas[order])
-    t_last = float(t_sorted[-1])
+    starts_sorted = np.sort(starts_arrays[0] if len(starts_arrays) == 1
+                            else np.concatenate(starts_arrays))
+    ends_sorted = np.sort(ends_arrays[0] if len(ends_arrays) == 1
+                          else np.concatenate(ends_arrays))
+    # every end is >= its start, so the trace's last event is the last end
+    t_last = float(ends_sorted[-1])
 
     # sample grid via the same repeated addition as the reference loop so
     # float accumulation matches bit-for-bit
@@ -243,9 +243,12 @@ def concurrency_series(tasks: Sequence[Task], dt: float = 10.0
         samples.append(s)
         s += dt
     if samples:
-        # concurrency at sample s = running count after all events < s
-        pos = np.searchsorted(t_sorted, np.asarray(samples), side="left")
-        conc = np.where(pos > 0, csum[pos - 1], 0)
+        # concurrency at sample s = events strictly before s:
+        # #starts < s minus #ends < s (strict, so tie order is moot) —
+        # two searchsorted passes, no 2n lexsort/cumsum
+        grid = np.asarray(samples)
+        conc = (np.searchsorted(starts_sorted, grid, side="left")
+                - np.searchsorted(ends_sorted, grid, side="left"))
         out = [(s, int(c)) for s, c in zip(samples, conc)]
     else:
         out = []
@@ -286,8 +289,7 @@ class SchedMetrics:
                 "fairness": self.fairness}
 
 
-def _task_class(t: Task, by: str) -> str:
-    d = t.description
+def _desc_class(d, by: str) -> str:
     if by == "tenant":
         return d.tenant or "default"
     if by == "priority":
@@ -297,20 +299,37 @@ def _task_class(t: Task, by: str) -> str:
     raise KeyError(f"unknown class key {by!r} (tenant|priority|stage)")
 
 
+def _task_class(t: Task, by: str) -> str:
+    return _desc_class(t.description, by)
+
+
 def sched_metrics(tasks: Sequence[Task], by: str = "tenant"
                   ) -> SchedMetrics:
     """Scheduling-quality metrics per class: wait percentiles (admission to
     start — scheduler hold plus dispatch plus backend queueing) and the
     Jain fairness index over weighted served work, the quantity a
     fair-share policy equalizes. Services count PROVISIONING as their
-    start; tasks that never started contribute to ``n`` only."""
+    start; tasks that never started contribute to ``n`` only.
+
+    Cohort-aware: ``TaskCohort``/``CohortWave`` inputs contribute their
+    plan-time columns directly (waits = ``run_t - sched_t``, served from
+    ``done_t - run_t`` times the member width), so gated-scheduler runs at
+    cohort scale report fairness too instead of silently dropping the
+    cohort members."""
+    objs, cohorts = _split_cohorts(tasks)
     groups: Dict[str, List[Task]] = {}
-    for t in tasks:
+    for t in objs:
         groups.setdefault(_task_class(t, by), []).append(t)
+    coh_groups: Dict[str, List[TaskCohort]] = {}
+    for c in cohorts:
+        coh_groups.setdefault(_desc_class(c.template, by), []).append(c)
     by_class: Dict[str, ClassWait] = {}
     shares: List[float] = []
-    for cls, ts in sorted(groups.items()):
+    for cls in sorted(set(groups) | set(coh_groups)):
+        ts = groups.get(cls, ())
+        n_cls = len(ts)
         waits: List[float] = []
+        wait_parts: List[np.ndarray] = []
         served = 0.0
         weight = 0.0
         for t in ts:
@@ -327,14 +346,24 @@ def sched_metrics(tasks: Sequence[Task], by: str = "tenant"
                          else max(1, d.cores))
                 served += width * (end - start)
         if waits:
-            w = np.asarray(waits)
+            wait_parts.append(np.asarray(waits))
+        for c in coh_groups.get(cls, ()):
+            n_cls += c.n
+            weight = max(weight, c.template.share)
+            if c.run_t is None:
+                continue
+            wait_parts.append(c.run_t - c.sched_t)
+            served += c.cores_per_task() * float((c.done_t - c.run_t).sum())
+        if wait_parts:
+            w = (wait_parts[0] if len(wait_parts) == 1
+                 else np.concatenate(wait_parts))
             p50, p99 = np.percentile(w, (50.0, 99.0))
-            by_class[cls] = ClassWait(len(ts), len(waits), float(w.mean()),
+            by_class[cls] = ClassWait(n_cls, len(w), float(w.mean()),
                                       float(p50), float(p99),
                                       float(w.max()), served,
                                       weight or 1.0)
         else:
-            by_class[cls] = ClassWait(len(ts), 0, 0.0, 0.0, 0.0, 0.0,
+            by_class[cls] = ClassWait(n_cls, 0, 0.0, 0.0, 0.0, 0.0,
                                       served, weight or 1.0)
         shares.append(served / (weight or 1.0))
     x = np.asarray([s for s in shares if s > 0.0])

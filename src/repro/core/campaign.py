@@ -15,7 +15,8 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.agent import Agent
-from repro.core.task import Task, TaskDescription, TaskState
+from repro.core.task import (DescriptionBatch, Task, TaskDescription,
+                             TaskState)
 
 
 @dataclass
@@ -23,7 +24,10 @@ class Stage:
     """``make_tasks(ctx)`` is called when all dependencies completed; it may
     inspect ``ctx`` (agent, free resources, previous-stage results) to size
     the workload adaptively (§4.2: "the number of tasks instantiated by some
-    workflows is adjusted dynamically at runtime").
+    workflows is adjusted dynamically at runtime"). It may return a
+    ``List[TaskDescription]`` or a columnar
+    :class:`~repro.core.task.DescriptionBatch` — stage stamping and
+    dependency wiring then operate on whole columns instead of per object.
 
     ``priority``/``tenant`` stamp every task the stage creates (scheduler
     ordering classes / fair-share accounts). ``barrier=False`` launches the
@@ -104,13 +108,16 @@ class Campaign:
         stage = self.stages[name]
         ctx = StageContext(self.agent, self, stage)
         descs = stage.make_tasks(ctx)
-        for d in descs:
-            d.stage = name
-            d.workflow = stage.workflow or name
-            if stage.priority and not d.priority:
-                d.priority = stage.priority
-            if stage.tenant and not d.tenant:
-                d.tenant = stage.tenant
+        if isinstance(descs, DescriptionBatch):
+            self._stamp_batch(stage, name, descs)
+        else:
+            for d in descs:
+                d.stage = name
+                d.workflow = stage.workflow or name
+                if stage.priority and not d.priority:
+                    d.priority = stage.priority
+                if stage.tenant and not d.tenant:
+                    d.tenant = stage.tenant
         if not stage.barrier:
             self._wire_task_deps(stage, descs)
         self.engine.profiler.record(
@@ -129,20 +136,73 @@ class Campaign:
         # launch now — their tasks hold on per-task `after` dependencies
         self._release_nonbarrier_stages()
 
-    def _wire_task_deps(self, stage: Stage, descs: List[TaskDescription]):
+    def _stamp_batch(self, stage: Stage, name: str,
+                     batch: DescriptionBatch):
+        """Columnar equivalent of the per-description stage stamping:
+        stage/workflow overwrite whole columns; priority/tenant fill only
+        rows still at their defaults (same keep-explicit semantics as the
+        object path)."""
+        sentinel = object()
+        batch.set_column("stage", name)
+        batch.set_column("workflow", stage.workflow or name)
+        if stage.priority:
+            v = batch.scalar("priority", sentinel)
+            if v is sentinel:
+                col = batch.col("priority")
+                mask = col == 0
+                if mask.any():
+                    col = col.copy()
+                    col[mask] = stage.priority
+                    batch.set_column("priority", col)
+            elif not v:
+                batch.set_column("priority", stage.priority)
+        if stage.tenant:
+            v = batch.scalar("tenant", sentinel)
+            if v is sentinel:
+                codes, pool = batch.str_codes("tenant")
+                if "" in pool:
+                    batch.set_column(
+                        "tenant", [pool[c] or stage.tenant
+                                   for c in codes.tolist()])
+            elif not v:
+                batch.set_column("tenant", stage.tenant)
+
+    @staticmethod
+    def _stage_uids(tasks) -> List[str]:
+        """Uids of one submitted stage, whatever shape the submission
+        returned: a task list, a columnar batch handle (uids come from the
+        batch — materialization state is irrelevant), or a cohort wave."""
+        batch = getattr(tasks, "batch", None)
+        if batch is not None:
+            return [batch.uid(i) for i in range(batch.n)]
+        return [t.uid for t in tasks]
+
+    def _wire_task_deps(self, stage: Stage, descs):
         """Default ``after`` wiring for a barrier-free stage: 1:1 against a
         single same-sized upstream stage (the map-over-upstream pattern),
         otherwise each task waits on every upstream task. Descriptions
-        with explicit ``after`` keep it."""
-        upstream: List[List[Task]] = [self.stage_tasks.get(dep, [])
-                                      for dep in stage.depends_on]
+        with explicit ``after`` keep it. Batch stages write into the
+        sparse ``after`` column row by row."""
+        upstream = [self.stage_tasks.get(dep, [])
+                    for dep in stage.depends_on]
         one_to_one = (len(upstream) == 1
                       and len(upstream[0]) == len(descs))
-        all_uids = tuple(t.uid for ts in upstream for t in ts)
+        up_uids = ([self._stage_uids(upstream[0])] if one_to_one
+                   else [self._stage_uids(ts) for ts in upstream])
+        all_uids = (() if one_to_one
+                    else tuple(u for us in up_uids for u in us))
+        if isinstance(descs, DescriptionBatch):
+            for i in range(descs.n):
+                if descs.get("after", i):
+                    continue
+                descs.set_sparse("after", i,
+                                 (up_uids[0][i],) if one_to_one
+                                 else all_uids)
+            return
         for i, d in enumerate(descs):
             if d.after:
                 continue
-            d.after = ((upstream[0][i].uid,) if one_to_one else all_uids)
+            d.after = ((up_uids[0][i],) if one_to_one else all_uids)
 
     def _release_nonbarrier_stages(self):
         for other, stage in self.stages.items():

@@ -36,13 +36,14 @@ released by scheduled events at the planned end times.
 """
 from __future__ import annotations
 
+import math
 from heapq import heappop, heappush
 from typing import Any, Dict, List, Optional
 
 import numpy as np
 
-from repro.core.task import (CohortWave, Task, TaskCohort, TaskDescription,
-                             TaskState, _STATE_EVENT, reserve_uid_block)
+from repro.core.task import (CohortWave, DescriptionBatch, Task, TaskCohort,
+                             TaskDescription, TaskState, _STATE_EVENT)
 from repro.runtime.engine import SimEngine
 
 _INF = float("inf")
@@ -71,14 +72,6 @@ def _desc_key(d: TaskDescription) -> tuple:
     # the built-in accepts() predicates read
     return (d.backend, d.kind, bool(d.executable), d.cores, d.gpus,
             d.nodes, d.coupling, d.fn is not None)
-
-
-def _template_ok(d: TaskDescription, spec) -> bool:
-    return (d.service is None and not d.after and not d.max_retries
-            and not d.walltime and not d.checkpoint_dir
-            and not d.nodes and 1 <= d.cores <= spec.cores
-            and 0 <= d.gpus <= spec.gpus
-            and (d.kind == "executable" or d.kind == "function"))
 
 
 def _executor_quiescent(ex) -> bool:
@@ -331,7 +324,9 @@ def _bind_launch_state(g: _Group):
     g.launch = np.empty(g.n, dtype=np.float64)
     g.run = np.empty(g.n, dtype=np.float64)
     g.done = g.run if (g.all_zero) else np.empty(g.n, dtype=np.float64)
-    g.arrl = g.arr.tolist()
+    g.arrl = None        # lazily materialized by the generic merge; the
+    #                      single-group fast path reads g.arr chunked instead
+    #                      (a 10M-float list is ~320MB of boxed floats)
 
 
 def _candidate(g: _Group) -> tuple:
@@ -360,21 +355,126 @@ def _candidate(g: _Group) -> tuple:
             t = arr if r <= arr else r
             fin = fins[j]
             infl = inflight[j]
-            cap = caps[j]
-            # pool gate: free everything finished by t; while the pool is
-            # still full, advance t to the next finish (pops persist —
-            # they only free state this instance has provably shed by any
-            # later candidate time)
-            while fin and (fin[0] <= t or infl >= cap):
-                ft = heappop(fin)
+            # free everything finished by t — safe to persist: this
+            # instance's candidate base time is monotone across calls
+            # (arrivals and rs[j] only grow), so anything finished by t
+            # stays finished for every later query
+            while fin and fin[0] <= t:
+                heappop(fin)
                 infl -= 1
+            inflight[j] = infl
+            if infl >= caps[j]:
+                # pool full at t: this launch would wait for the next
+                # finish — peek only, nothing is freed until a launch
+                # actually commits on this instance (a persisted pop here
+                # would hand the slot to a launch on another instance at
+                # an earlier time, oversubscribing the pool)
+                ft = fin[0]
                 if ft > t:
                     t = ft
-            inflight[j] = infl
             if t < best_t:
                 best_t = t
                 best_j = j
     return best_t, best_j
+
+
+def _gather_normals(engine, n: int) -> np.ndarray:
+    """Draw ``n`` standard normals exactly as ``n`` sequential
+    ``engine.noisy`` calls would: consume the live buffer's tail first,
+    then whole 8192-draw refills, leaving the engine's buffer and cursor
+    in the identical state to the sequential path — so noise consumed in
+    bulk here and per-call elsewhere stays one interleaved stream."""
+    parts = []
+    buf = engine._normal_buf
+    pos = engine._normal_pos
+    take = 0
+    if buf is not None and pos < 8192:
+        take = 8192 - pos
+        if take > n:
+            take = n
+        parts.append(buf[pos:pos + take])
+        pos += take
+    rem = n - take
+    while rem > 0:
+        buf = engine._np_rng.standard_normal(8192)
+        k = 8192 if rem >= 8192 else rem
+        parts.append(buf[:k])
+        pos = k
+        rem -= k
+    engine._normal_buf = buf
+    engine._normal_pos = pos
+    return parts[0] if len(parts) == 1 else np.concatenate(parts)
+
+
+_CHUNK = 1 << 18          # fast-path read/write chunk (2MB of floats)
+
+
+def _merge_single_zero(engine, g: _Group):
+    """Specialized drain for the dominant wave shape — one group, all-zero
+    durations (no finish-heap bookkeeping): the candidate scan is inlined
+    with an early exit (the first instance whose pipeline is free by the
+    head arrival wins outright, since no candidate can beat the arrival
+    itself), noise is pre-gathered in bulk (same RNG stream and buffer
+    state as per-call ``noisy``), and arrivals/results stream through
+    bounded chunks of unboxed floats instead of whole-wave Python lists.
+    Per-launch arithmetic is kept scalar (``math.exp``, same op order), so
+    columns stay bit-identical to the object path."""
+    n = g.n
+    sigma = g.sigma
+    zs = _gather_normals(engine, n) if sigma > 0.0 else None
+    exp = math.exp
+    arr_col = g.arr
+    rs = g.rs
+    k = len(rs)
+    means = g.means
+    cnext = g.cnext
+    civl = g.civl
+    inf = _INF
+    rng = range(k)
+    for c0 in range(0, n, _CHUNK):
+        c1 = min(c0 + _CHUNK, n)
+        arrs = arr_col[c0:c1].tolist()
+        zl = zs[c0:c1].tolist() if zs is not None else None
+        launch_l: List[float] = []
+        run_l: List[float] = []
+        lap = launch_l.append
+        rap = run_l.append
+        for h, arr in enumerate(arrs):
+            best_t = inf
+            best_j = 0
+            for j in rng:
+                r = rs[j]
+                if r <= arr:
+                    # arrival-bound: t == arr is the global minimum and
+                    # this is its first index — the object path's pick
+                    best_j = j
+                    t_l = arr
+                    break
+                if r < best_t:
+                    best_t = r
+                    best_j = j
+            else:
+                t_l = best_t
+            gg = (means[best_j] * exp(sigma * zl[h]) if zl is not None
+                  else means[best_j])
+            start = cnext if cnext > t_l else t_l
+            cnext = start + civl
+            dcoord = cnext - t_l
+            svc = gg if gg > dcoord else dcoord
+            if svc <= 1e-6:
+                svc = 1e-6
+            e = t_l + svc
+            lap(t_l)
+            rap(e)
+            rs[best_j] = e
+        g.launch[c0:c1] = launch_l
+        g.run[c0:c1] = run_l
+    g.cnext = cnext
+    g.h = n
+    # zero-duration launches on one instance strictly increase in end time
+    # (arrival- and backlog-bound alike), so each final rs IS that
+    # instance's max completion
+    g.maxdone = list(rs)
 
 
 def _merge_launches(engine, groups: List[_Group]):
@@ -384,6 +484,9 @@ def _merge_launches(engine, groups: List[_Group]):
     LAUNCHING / RUNNING / DONE columns."""
     noisy = engine.noisy
     live = [g for g in groups if g.n > 0]
+    for g in live:
+        if g.arrl is None:
+            g.arrl = g.arr.tolist()
     single = live[0] if len(live) == 1 else None
     while live:
         if single is not None:
@@ -430,11 +533,19 @@ def _merge_launches(engine, groups: List[_Group]):
         g.run[h] = e
         g.rs[j] = e
         if g.fins is not None:
+            fin = g.fins[j]
+            infl = g.inflight[j]
+            # commit the frees this launch's pool wait relied on: all
+            # later queries on j run at t >= rs[j] > t_l, so these
+            # finishes stay shed
+            while fin and fin[0] <= t_l:
+                heappop(fin)
+                infl -= 1
             dur = g.dur0 if g.durs is None else g.durs[h]
             done = e + dur if dur > 0.0 else e
             g.done[h] = done
-            heappush(g.fins[j], done)
-            g.inflight[j] += 1
+            heappush(fin, done)
+            g.inflight[j] = infl + 1
             if done > g.maxdone[j]:
                 g.maxdone[j] = done
         else:
@@ -459,6 +570,8 @@ def _stamp_trace(engine, g: _Group, cohort: TaskCohort, t0: float):
     if g.descs is not None:
         descs = g.descs
         name_fn = lambda i, _d=descs: _d[i].uid          # noqa: E731
+    elif cohort.src_batch is not None:
+        name_fn = cohort.uid          # resolves through the batch's uids
     else:
         fmt = cohort.uid_prefix + ".%06d"
         base_uid = cohort.uid_start
@@ -473,6 +586,7 @@ def _stamp_trace(engine, g: _Group, cohort: TaskCohort, t0: float):
         if nid is None:
             nid = nids[state] = prof.name_id(_STATE_EVENT[state])
         row_nids.append(nid)
+    prof.reserve_rows(5 * g.n)
     prof.record_fast_many(np.full(g.n, t0), eids, row_nids[0])
     prof.record_fast_many(g.arr, eids, row_nids[1])
     prof.record_fast_many(g.launch, eids, row_nids[2])
@@ -518,13 +632,15 @@ def _schedule_events(agent, g: _Group, cohort: TaskCohort, t0: float):
 
 def _plan(agent, groups: List[_Group], n: int, gid,
           descs: Optional[List[TaskDescription]],
-          uid_prefix: str = "task", uid_start: int = 0) -> CohortWave:
+          uid_prefix: str = "task", uid_start: int = 0,
+          src_batch=None) -> CohortWave:
     engine = agent.engine
     t0 = engine.now()
     qt, t_disp_end = _replay_dispatch(agent, n, gid, groups, t0)
     if gid is None:
         g = groups[0]
         g.arr = qt
+        g.idx = None
         g.gidx0 = None
         g.n = n
         g.descs = descs
@@ -541,7 +657,10 @@ def _plan(agent, groups: List[_Group], n: int, gid,
                 g.durs = g.durs[idx]
     for g in groups:
         _bind_launch_state(g)
-    _merge_launches(engine, groups)
+    if (len(groups) == 1 and groups[0].fins is None and groups[0].n > 0):
+        _merge_single_zero(engine, groups[0])
+    else:
+        _merge_launches(engine, groups)
 
     # hold the dispatch pipeline for the replayed window, so object-path
     # submissions landing mid-wave queue behind it (released by event)
@@ -553,7 +672,9 @@ def _plan(agent, groups: List[_Group], n: int, gid,
     for g in groups:
         cohort = TaskCohort(engine, g.template, g.n, g.backend,
                             descs=g.descs, uid_prefix=uid_prefix,
-                            uid_start=uid_start)
+                            uid_start=uid_start,
+                            rows=(g.idx if src_batch is not None else None),
+                            src_batch=src_batch)
         cohort.sched_t = t0
         cohort.queued_t = g.arr
         cohort.launch_t = g.launch
@@ -592,19 +713,125 @@ def try_plan(agent, descriptions) -> Optional[CohortWave]:
     return _plan(agent, groups, len(descs), gid, descs)
 
 
+_VARIES = object()        # sentinel: column is per-row, not uniform
+
+
+def _str_info(batch: DescriptionBatch, name: str):
+    """``(codes, pool)`` for a string column without broadcasting uniform
+    columns to arrays: codes is None when every row shares ``pool[0]``."""
+    v = batch.scalar(name, _VARIES)
+    if v is _VARIES:
+        return batch.str_codes(name)
+    return None, [v]
+
+
+def try_plan_batch(agent, batch: DescriptionBatch) -> Optional[CohortWave]:
+    """Plan a :class:`DescriptionBatch` as a cohort wave by reading its
+    columns directly — eligibility is decided per column (O(1) for uniform
+    columns, one vector op for per-row ones) and grouping runs on interned
+    codes, so no description objects and no per-row python scan exist
+    anywhere on this path. Returns None (object fallback) when any
+    eligibility condition fails."""
+    n = batch.n
+    if n <= 0 or not _agent_eligible(agent):
+        return None
+    # column-level disqualifiers — the same per-description conditions the
+    # object scan checks, expressed against whole columns
+    if (batch.has_field("service") or batch.has_field("after")
+            or batch.has_field("restarted_from")):
+        return None
+    for f in ("max_retries", "nodes", "walltime"):
+        v = batch.scalar(f, _VARIES)
+        if v is _VARIES:
+            if batch.col(f).any():
+                return None
+        elif v:
+            return None
+    if any(_str_info(batch, "checkpoint_dir")[1]):
+        return None
+    spec = agent.node_spec
+    cores_col = gpus_col = None
+    v = batch.scalar("cores", _VARIES)
+    if v is _VARIES:
+        cores_col = batch.col("cores")
+        if int(cores_col.min()) < 1 or int(cores_col.max()) > spec.cores:
+            return None
+    elif v < 1 or v > spec.cores:
+        return None
+    v = batch.scalar("gpus", _VARIES)
+    if v is _VARIES:
+        gpus_col = batch.col("gpus")
+        if int(gpus_col.min()) < 0 or int(gpus_col.max()) > spec.gpus:
+            return None
+    elif v < 0 or v > spec.gpus:
+        return None
+    kd_codes, kd_pool = _str_info(batch, "kind")
+    for k in kd_pool:
+        if k != "executable" and k != "function":
+            return None
+    if batch.scalar("fn", _VARIES) is _VARIES:
+        return None       # per-row fn would make the route key vary row-wise
+    # grouping: one combined int code per row over the route-key fields
+    # that actually vary (executable contributes only its truthiness, like
+    # the object route key)
+    parts: List[tuple] = []
+    if kd_codes is not None:
+        parts.append((kd_codes, len(kd_pool)))
+    for name in ("backend", "coupling"):
+        codes, pool = _str_info(batch, name)
+        if codes is not None:
+            parts.append((codes, len(pool)))
+    ex_codes, ex_pool = _str_info(batch, "executable")
+    if ex_codes is not None:
+        flags = np.fromiter((1 if s else 0 for s in ex_pool),
+                            dtype=np.int64, count=len(ex_pool))
+        if flags.min() != flags.max():
+            parts.append((flags[ex_codes], 2))
+    for colv in (cores_col, gpus_col):
+        if colv is not None:
+            u, inv = np.unique(colv, return_inverse=True)
+            if len(u) > 1:
+                parts.append((inv.astype(np.int64, copy=False), len(u)))
+    if not parts:
+        gid = None
+        reps = [0]
+    else:
+        combo = parts[0][0].astype(np.int64, copy=True)
+        for codes, card in parts[1:]:
+            combo *= card
+            combo += codes
+        uniq, first, inv = np.unique(combo, return_index=True,
+                                     return_inverse=True)
+        k = len(uniq)
+        if k > _MAX_GROUPS:
+            return None
+        if k == 1:
+            gid = None
+            reps = [0]
+        else:
+            # renumber to first-occurrence order (the object scan's group
+            # order), so dispatch replay and cohort creation match it
+            order = np.argsort(first, kind="stable")
+            remap = np.empty(k, dtype=np.uint8)
+            remap[order] = np.arange(k, dtype=np.uint8)
+            gid = remap[inv]
+            reps = [int(first[j]) for j in order]
+    groups = [_Group(_desc_key(batch.view(r)), batch.view(r)) for r in reps]
+    if batch.scalar("duration", _VARIES) is _VARIES:
+        dur_col = batch.col("duration")
+        for g in groups:
+            g.durs = dur_col
+    if not _bind_backends(agent, groups):
+        return None
+    return _plan(agent, groups, n, gid, None, src_batch=batch)
+
+
 def try_plan_wave(agent, template: TaskDescription,
                   n: int) -> Optional[CohortWave]:
     """Plan ``n`` clones of ``template`` as a single-group cohort without
-    materializing descriptions (O(1) memory per task: uids come from a
-    reserved block, the template is shared). Returns None when
-    ineligible."""
+    materializing descriptions (O(1) memory per task: the batch stores one
+    scalar per column and rows name themselves from a reserved uid block).
+    Returns None when ineligible."""
     if n <= 0 or not _agent_eligible(agent):
         return None
-    if not _template_ok(template, agent.node_spec):
-        return None
-    groups = [_Group(_desc_key(template), template)]
-    if not _bind_backends(agent, groups):
-        return None
-    prefix, start = reserve_uid_block(n)
-    return _plan(agent, groups, n, None, None,
-                 uid_prefix=prefix, uid_start=start)
+    return try_plan_batch(agent, DescriptionBatch.from_template(template, n))

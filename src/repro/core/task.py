@@ -12,7 +12,9 @@ from __future__ import annotations
 import itertools
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 
 class TaskState(str, Enum):
@@ -175,9 +177,423 @@ class TaskDescription:
         self.checkpoint_period = checkpoint_period
         self.resume_from = resume_from
 
+    @classmethod
+    def to_batch(cls, descriptions: Sequence["TaskDescription"]
+                 ) -> "DescriptionBatch":
+        """Columnarize a description list into a :class:`DescriptionBatch`
+        (uniform fields collapse to scalars, rare fields go sparse). The
+        round-trip ``from_batch(to_batch(descs))`` returns the original
+        objects, so batch submission of a converted list is byte-for-byte
+        the same input as the list itself."""
+        return DescriptionBatch.from_descriptions(descriptions)
+
+    @staticmethod
+    def from_batch(batch: "DescriptionBatch") -> List["TaskDescription"]:
+        """Materialize a batch back into per-row description objects (the
+        object-path fallback; inverse of :meth:`to_batch`)."""
+        return batch.to_descriptions()
+
 
 class InvalidTransition(RuntimeError):
     pass
+
+
+# ---------------------------------------------------------------------------
+# Columnar descriptions (struct-of-arrays submission path) — the batch type
+# every layer of the submission path consumes natively; see
+# src/repro/runtime/README.md "Columnar descriptions".
+# ---------------------------------------------------------------------------
+
+# dense column families with their TaskDescription defaults: a column whose
+# value equals the default is simply absent from storage
+_BATCH_FLOAT: Dict[str, float] = {"duration": 0.0, "walltime": 0.0,
+                                  "checkpoint_period": 0.0, "share": 1.0}
+_BATCH_INT: Dict[str, int] = {"cores": 1, "gpus": 0, "nodes": 0,
+                              "priority": 0, "max_retries": 0}
+_BATCH_STR: Dict[str, Optional[str]] = {
+    "kind": "executable", "coupling": "loose", "backend": None,
+    "stage": "", "workflow": "", "tenant": "", "executable": "",
+    "checkpoint_dir": ""}
+# rare fields: stored as row -> value dicts (or one broadcast scalar)
+_BATCH_SPARSE: Dict[str, Any] = {
+    "fn": None, "args": (), "kwargs": None, "arguments": (),
+    "service": None, "restarted_from": None, "after": (),
+    "resume_from": None}
+_BATCH_FIELDS = (tuple(_BATCH_FLOAT) + tuple(_BATCH_INT)
+                 + tuple(_BATCH_STR) + tuple(_BATCH_SPARSE))
+
+
+class _SparseCol(dict):
+    """Per-row overrides for one rare field: row -> value, with a
+    batch-level default for unlisted rows."""
+
+    __slots__ = ("default",)
+
+    def __init__(self, *args, default=None):
+        super().__init__(*args)
+        self.default = default
+
+
+class DescriptionBatch:
+    """Struct-of-arrays container for N task descriptions.
+
+    Dense numeric fields are one scalar (uniform across the batch — the
+    ``from_template`` wave case, O(1) memory) or one numpy column; string
+    fields are one scalar or interned ``(codes, pool)`` pairs; rare fields
+    (``fn``/``after``/``service``/...) live in sparse row dicts. Rows
+    materialize lazily as :class:`DescView` (description-shaped, read-only)
+    or fully via :meth:`to_descriptions`. Uids are an explicit list (the
+    ``from_descriptions`` round-trip) or a lazily reserved contiguous
+    ``new_uid`` block."""
+
+    __slots__ = ("n", "_num", "_str", "_sparse", "_uids", "_uid_prefix",
+                 "_uid_start", "_descs")
+
+    def __init__(self, n: int, uids: Optional[Sequence[str]] = None,
+                 **fields: Any):
+        if n < 0:
+            raise ValueError("DescriptionBatch: negative length")
+        self.n = n
+        self._num: Dict[str, Any] = {}
+        self._str: Dict[str, Any] = {}
+        self._sparse: Dict[str, Any] = {}
+        self._descs: Optional[List[TaskDescription]] = None
+        self._uids = list(uids) if uids is not None else None
+        if self._uids is not None and len(self._uids) != n:
+            raise ValueError("DescriptionBatch: uids length mismatch")
+        self._uid_prefix: Optional[str] = None
+        self._uid_start = -1
+        for name, val in fields.items():
+            self.set_column(name, val)
+        self._normalize_coupling()
+
+    # ------------------------------------------------------------- building
+    @classmethod
+    def from_template(cls, template: TaskDescription, n: int
+                      ) -> "DescriptionBatch":
+        """O(1)-memory batch of ``n`` rows all shaped like ``template``
+        (every column a scalar; ``template.uid`` is ignored — rows name
+        themselves from a reserved uid block on first use)."""
+        b = cls(n)
+        for name in _BATCH_FLOAT:
+            b.set_column(name, getattr(template, name))
+        for name in _BATCH_INT:
+            b.set_column(name, getattr(template, name))
+        for name in _BATCH_STR:
+            b.set_column(name, getattr(template, name))
+        for name in _BATCH_SPARSE:
+            b.set_column(name, getattr(template, name))
+        return b
+
+    @classmethod
+    def from_descriptions(cls, descriptions: Sequence[TaskDescription]
+                          ) -> "DescriptionBatch":
+        """Columnarize existing description objects (uniform columns
+        collapse to scalars; non-default rare fields go sparse). The source
+        objects are retained so :meth:`to_descriptions` round-trips to the
+        originals."""
+        descs = list(descriptions)
+        n = len(descs)
+        b = cls(n, uids=[d.uid for d in descs])
+        b._descs = descs
+        if not n:
+            return b
+        d0 = descs[0]
+        for name in _BATCH_FIELDS:
+            first = getattr(d0, name)
+            uniform = True
+            for d in descs:
+                if getattr(d, name) != first:
+                    uniform = False
+                    break
+            if uniform:
+                b.set_column(name, first)
+            elif name in _BATCH_SPARSE:
+                default = _BATCH_SPARSE[name]
+                col = _SparseCol(default=default)
+                for i, d in enumerate(descs):
+                    v = getattr(d, name)
+                    if v != default and not (name == "kwargs" and not v):
+                        col[i] = v
+                b._sparse[name] = col
+            else:
+                b.set_column(name, [getattr(d, name) for d in descs])
+        return b
+
+    def set_column(self, name: str, value: Any) -> None:
+        """Set one whole column: a scalar (uniform) or a length-n sequence.
+        Columns left at (or set to) the TaskDescription default are not
+        stored."""
+        n = self.n
+        if name in _BATCH_FLOAT or name in _BATCH_INT:
+            isfloat = name in _BATCH_FLOAT
+            default = _BATCH_FLOAT[name] if isfloat else _BATCH_INT[name]
+            if isinstance(value, (int, float, np.integer, np.floating)):
+                v = float(value) if isfloat else int(value)
+                if v == default:
+                    self._num.pop(name, None)
+                else:
+                    self._num[name] = v
+                return
+            col = np.asarray(value,
+                             dtype=np.float64 if isfloat else np.int64)
+            if len(col) != n:
+                raise ValueError(f"column {name!r}: length mismatch")
+            self._num[name] = col
+        elif name in _BATCH_STR:
+            if value is None or isinstance(value, str):
+                if value == _BATCH_STR[name]:
+                    self._str.pop(name, None)
+                else:
+                    self._str[name] = value
+                return
+            vals = list(value)
+            if len(vals) != n:
+                raise ValueError(f"column {name!r}: length mismatch")
+            self._str[name] = self._encode_str(vals)
+        elif name in _BATCH_SPARSE:
+            default = _BATCH_SPARSE[name]
+            if isinstance(value, _SparseCol):
+                self._sparse[name] = value
+            elif isinstance(value, dict) and name != "kwargs":
+                self._sparse[name] = _SparseCol(value, default=default)
+            else:
+                if value == default or (name == "kwargs" and not value):
+                    self._sparse.pop(name, None)
+                else:
+                    self._sparse[name] = value      # broadcast scalar
+        else:
+            raise KeyError(f"unknown description field {name!r}")
+
+    def set_sparse(self, name: str, row: int, value: Any) -> None:
+        """Set one rare field for one row (e.g. campaign dep wiring writing
+        into the ``after`` column)."""
+        if name not in _BATCH_SPARSE:
+            raise KeyError(f"not a sparse field: {name!r}")
+        col = self._sparse.get(name)
+        if not isinstance(col, _SparseCol):
+            col = _SparseCol(default=(col if col is not None
+                                      else _BATCH_SPARSE[name]))
+            self._sparse[name] = col
+        col[row] = value
+
+    @staticmethod
+    def _encode_str(vals: List[Optional[str]]):
+        pool: List[Optional[str]] = []
+        codes_map: Dict[Any, int] = {}
+        codes = np.empty(len(vals), dtype=np.int64)
+        for i, v in enumerate(vals):
+            c = codes_map.get(v)
+            if c is None:
+                c = codes_map[v] = len(pool)
+                pool.append(v)
+            codes[i] = c
+        if len(pool) == 1:
+            return pool[0]
+        return codes, pool
+
+    def _normalize_coupling(self) -> None:
+        # replicate TaskDescription.__init__: node-wide (gang) tasks default
+        # to tight coupling
+        nodes = self._num.get("nodes")
+        if nodes is None:
+            return
+        coup = self._str.get("coupling", "loose")
+        if not isinstance(nodes, np.ndarray):
+            # every row is a gang
+            if isinstance(coup, str):
+                if coup == "loose":
+                    self._str["coupling"] = "tight"
+            else:
+                codes, pool = coup
+                self._str["coupling"] = self._encode_str(
+                    ["tight" if pool[c] == "loose" else pool[c]
+                     for c in codes.tolist()])
+            return
+        mask = nodes > 0
+        if not mask.any():
+            return
+        vals = [self.get("coupling", i) for i in range(self.n)]
+        for i in np.flatnonzero(mask).tolist():
+            if vals[i] == "loose":
+                vals[i] = "tight"
+        self._str["coupling"] = self._encode_str(vals)
+
+    # -------------------------------------------------------------- access
+    def get(self, name: str, i: int) -> Any:
+        """Python value of field ``name`` at row ``i``."""
+        if name in _BATCH_FLOAT or name in _BATCH_INT:
+            v = self._num.get(name)
+            if v is None:
+                return (_BATCH_FLOAT.get(name)
+                        if name in _BATCH_FLOAT else _BATCH_INT[name])
+            return v[i].item() if isinstance(v, np.ndarray) else v
+        if name in _BATCH_STR:
+            v = self._str.get(name, _BATCH_STR[name])
+            if isinstance(v, tuple):
+                codes, pool = v
+                return pool[codes[i]]
+            return v
+        if name in _BATCH_SPARSE:
+            v = self._sparse.get(name)
+            if v is None:
+                out = _BATCH_SPARSE[name]
+            elif isinstance(v, _SparseCol):
+                out = v.get(i, v.default)
+            else:
+                out = v
+            if name == "kwargs" and out is None:
+                return {}
+            return out
+        raise KeyError(f"unknown description field {name!r}")
+
+    def scalar(self, name: str, varies: Any = None) -> Any:
+        """The column's uniform value, or ``varies`` when it is per-row."""
+        if name in _BATCH_FLOAT or name in _BATCH_INT:
+            v = self._num.get(name)
+            if v is None:
+                return (_BATCH_FLOAT.get(name)
+                        if name in _BATCH_FLOAT else _BATCH_INT[name])
+            return varies if isinstance(v, np.ndarray) else v
+        if name in _BATCH_STR:
+            v = self._str.get(name, _BATCH_STR[name])
+            return varies if isinstance(v, tuple) else v
+        if name in _BATCH_SPARSE:
+            v = self._sparse.get(name)
+            if isinstance(v, _SparseCol):
+                return varies
+            if v is None:
+                v = _BATCH_SPARSE[name]
+            if name == "kwargs" and v is None:
+                return {}
+            return v
+        raise KeyError(f"unknown description field {name!r}")
+
+    def col(self, name: str) -> np.ndarray:
+        """Dense numeric column broadcast to a full array (float64 for the
+        float family, int64 for ints) — what the scheduler argsorts."""
+        if name in _BATCH_FLOAT:
+            v = self._num.get(name, _BATCH_FLOAT[name])
+            if isinstance(v, np.ndarray):
+                return v
+            return np.full(self.n, v, dtype=np.float64)
+        if name in _BATCH_INT:
+            v = self._num.get(name, _BATCH_INT[name])
+            if isinstance(v, np.ndarray):
+                return v
+            return np.full(self.n, v, dtype=np.int64)
+        raise KeyError(f"not a dense numeric field: {name!r}")
+
+    def str_codes(self, name: str):
+        """String column as ``(codes int64[n], pool)`` — scheduler grouping
+        and fair-share tenancy run on the codes, never the strings."""
+        v = self._str.get(name, _BATCH_STR[name])
+        if isinstance(v, tuple):
+            return v
+        return np.zeros(self.n, dtype=np.int64), [v]
+
+    def sparse_rows(self, name: str) -> Dict[int, Any]:
+        """The per-row override dict for a rare field (empty when the field
+        is uniform/default)."""
+        v = self._sparse.get(name)
+        return v if isinstance(v, _SparseCol) else {}
+
+    def has_field(self, name: str) -> bool:
+        """Whether any row carries a non-default value for ``name`` (rare
+        fields: conservative — presence of the column counts)."""
+        if name in _BATCH_SPARSE:
+            v = self._sparse.get(name)
+            return v is not None and (not isinstance(v, _SparseCol)
+                                      or len(v) > 0
+                                      or v.default != _BATCH_SPARSE[name])
+        if name in _BATCH_STR:
+            return name in self._str
+        return name in self._num
+
+    # ---------------------------------------------------------------- uids
+    def has_explicit_uids(self) -> bool:
+        return self._uids is not None
+
+    def assign_uid_block(self, prefix: str = "task") -> None:
+        """Reserve the batch's contiguous uid block now (no-op when uids
+        are explicit or a block is already assigned)."""
+        if self._uids is None and self._uid_prefix is None:
+            self._uid_prefix, self._uid_start = reserve_uid_block(
+                self.n, prefix)
+
+    @property
+    def uid_block(self) -> tuple:
+        """``(prefix, start)`` of the reserved uid block (assigning it on
+        first use); only valid when uids are not explicit."""
+        if self._uids is not None:
+            raise ValueError("batch has explicit uids, not a block")
+        self.assign_uid_block()
+        return self._uid_prefix, self._uid_start
+
+    def uid(self, i: int) -> str:
+        if self._uids is not None:
+            return self._uids[i]
+        self.assign_uid_block()
+        return "%s.%06d" % (self._uid_prefix, self._uid_start + i)
+
+    # ------------------------------------------------------------ row views
+    def view(self, i: int) -> "DescView":
+        return DescView(self, i)
+
+    def to_descriptions(self) -> List[TaskDescription]:
+        """Materialize every row as a real TaskDescription (the object-path
+        fallback). A ``from_descriptions`` batch returns its originals."""
+        if self._descs is not None:
+            return list(self._descs)
+        return [self.view(i).materialize() for i in range(self.n)]
+
+    def __len__(self) -> int:
+        return self.n
+
+    def __iter__(self) -> Iterable["DescView"]:
+        return (DescView(self, i) for i in range(self.n))
+
+    def __repr__(self):
+        cols = sorted(list(self._num) + list(self._str)
+                      + list(self._sparse))
+        return f"<DescriptionBatch n={self.n} cols={cols}>"
+
+
+class DescView:
+    """Lazy, read-only, description-shaped view of one batch row: every
+    TaskDescription field is a property reading the batch columns, so
+    executors/routing/policies consume batch rows without materializing
+    objects. ``materialize()`` produces a real TaskDescription when one is
+    needed (e.g. ``dataclasses.replace`` in retry/speculation paths)."""
+
+    __slots__ = ("_b", "_i")
+
+    def __init__(self, batch: DescriptionBatch, i: int):
+        self._b = batch
+        self._i = i
+
+    @property
+    def uid(self) -> str:
+        return self._b.uid(self._i)
+
+    def materialize(self) -> TaskDescription:
+        b, i = self._b, self._i
+        return TaskDescription(
+            uid=b.uid(i), **{name: b.get(name, i) for name in _BATCH_FIELDS})
+
+    def __repr__(self):
+        return f"<DescView row={self._i} of {self._b!r}>"
+
+
+def _mk_batch_field(name: str):
+    def get(self):
+        return self._b.get(name, self._i)
+    return property(get)
+
+
+for _f in _BATCH_FIELDS:
+    setattr(DescView, _f, _mk_batch_field(_f))
+del _f
 
 
 class Task:
@@ -268,11 +684,12 @@ class TaskCohort:
     __slots__ = ("engine", "n", "template", "descs", "backend",
                  "uid_prefix", "uid_start", "sched_t", "queued_t",
                  "launch_t", "run_t", "done_t", "durations", "n_terminal",
-                 "finalized")
+                 "finalized", "rows", "src_batch")
 
     def __init__(self, engine, template: TaskDescription, n: int,
                  backend: str, descs: Optional[List[TaskDescription]] = None,
-                 uid_prefix: str = "task", uid_start: int = 0):
+                 uid_prefix: str = "task", uid_start: int = 0,
+                 rows=None, src_batch=None):
         self.engine = engine
         self.n = n
         self.template = template          # shape/kind source for analytics
@@ -280,6 +697,8 @@ class TaskCohort:
         self.backend = backend            # (wave API: template + uid block)
         self.uid_prefix = uid_prefix
         self.uid_start = uid_start
+        self.rows = rows                  # member -> source-batch row, or
+        self.src_batch = src_batch        # None (member i IS row i)
         self.sched_t = 0.0                # scalar: whole bulk stamped at once
         self.queued_t = None              # float64[n], filled by the planner
         self.launch_t = None
@@ -293,10 +712,18 @@ class TaskCohort:
     def uid(self, i: int) -> str:
         if self.descs is not None:
             return self.descs[i].uid
+        if self.src_batch is not None:
+            return self.src_batch.uid(
+                i if self.rows is None else int(self.rows[i]))
         return "%s.%06d" % (self.uid_prefix, self.uid_start + i)
 
     def description(self, i: int) -> TaskDescription:
-        return self.descs[i] if self.descs is not None else self.template
+        if self.descs is not None:
+            return self.descs[i]
+        if self.src_batch is not None:
+            return self.src_batch.view(
+                i if self.rows is None else int(self.rows[i]))
+        return self.template
 
     def task(self, i: int) -> "CohortTaskView":
         return CohortTaskView(self, i)

@@ -3,6 +3,13 @@
     python -m repro.observability report BENCH_observability.json
         Render any saved RunReport / BENCH payload as the ASCII report.
 
+    python -m repro.observability report BASELINE.json CANDIDATE.json \\
+            [--tolerance 0.1]
+        Cross-run diff: per-phase lifecycle deltas and throughput delta of
+        the candidate vs the baseline; exits nonzero when any phase mean
+        grows (or throughput shrinks) by more than --tolerance, so a
+        committed baseline payload gates regressions in CI.
+
     python -m repro.observability demo [--tasks N] [--trace out.json]
         Run a small null campaign on the sim engine, print its report, and
         optionally export the Chrome trace JSON (load in Perfetto or
@@ -15,18 +22,34 @@ import json
 import sys
 from typing import List, Optional
 
-from repro.observability.report import RunReport, render_payload
+from repro.observability.report import (RunReport, diff_payloads,
+                                        render_payload)
+
+
+def _load(path: str):
+    try:
+        with open(path) as fh:
+            return json.load(fh)
+    except (OSError, ValueError) as exc:
+        print(f"error: cannot read {path}: {exc}", file=sys.stderr)
+        return None
 
 
 def _cmd_report(args) -> int:
-    try:
-        with open(args.file) as fh:
-            payload = json.load(fh)
-    except (OSError, ValueError) as exc:
-        print(f"error: cannot read {args.file}: {exc}", file=sys.stderr)
+    if len(args.files) > 2:
+        print("error: report takes one payload or a baseline/candidate "
+              "pair", file=sys.stderr)
         return 1
-    print(render_payload(payload))
-    return 0
+    payloads = [_load(p) for p in args.files]
+    if any(p is None for p in payloads):
+        return 1
+    if len(payloads) == 1:
+        print(render_payload(payloads[0]))
+        return 0
+    lines, viols = diff_payloads(payloads[0], payloads[1],
+                                 tolerance=args.tolerance)
+    print("\n".join(lines))
+    return 1 if viols else 0
 
 
 def _cmd_demo(args) -> int:
@@ -62,8 +85,13 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.observability",
                                  description=__doc__)
     sub = ap.add_subparsers(dest="cmd", required=True)
-    rp = sub.add_parser("report", help="render a saved payload")
-    rp.add_argument("file")
+    rp = sub.add_parser("report",
+                        help="render a saved payload, or diff two")
+    rp.add_argument("files", nargs="+", metavar="FILE",
+                    help="one payload to render, or BASELINE CANDIDATE")
+    rp.add_argument("--tolerance", type=float, default=0.10,
+                    help="relative regression tolerance for diffs "
+                         "(default 0.10)")
     rp.set_defaults(fn=_cmd_report)
     dm = sub.add_parser("demo", help="run + report a small null campaign")
     dm.add_argument("--tasks", type=int, default=2000)

@@ -78,19 +78,51 @@ class GroupBreakdown:
 
 @dataclass
 class LifecycleBreakdown:
-    """The full decomposition: overall + per-group phase aggregates."""
+    """The full decomposition: overall + per-group phase aggregates, plus
+    (when services are passed in) per-service request phase splits."""
 
     by: Optional[str]
     n_tasks: int                         # decomposed (DONE with full stamps)
     n_skipped: int                       # failed / incomplete / undone
     total: GroupBreakdown
     groups: Dict[str, GroupBreakdown] = field(default_factory=dict)
+    services: Dict[str, Any] = field(default_factory=dict)
 
     def as_dict(self) -> Dict[str, Any]:
-        return {"by": self.by, "n_tasks": self.n_tasks,
-                "n_skipped": self.n_skipped,
-                "total": self.total.as_dict(),
-                "groups": {k: v.as_dict() for k, v in self.groups.items()}}
+        out = {"by": self.by, "n_tasks": self.n_tasks,
+               "n_skipped": self.n_skipped,
+               "total": self.total.as_dict(),
+               "groups": {k: v.as_dict() for k, v in self.groups.items()}}
+        if self.services:
+            out["services"] = self.services
+        return out
+
+
+def _stats(col: np.ndarray) -> PhaseStats:
+    """PhaseStats aggregate of one duration column."""
+    if not len(col):
+        return PhaseStats(0, 0.0, 0.0, 0.0, 0.0, 0.0)
+    p50, p99 = np.percentile(col, (50.0, 99.0))
+    return PhaseStats(len(col), float(col.mean()), float(p50), float(p99),
+                      float(col.max()), float(col.sum()))
+
+
+def service_request_breakdown(service) -> Dict[str, Any]:
+    """Queue-vs-service phase split of one service's request log: the log
+    stamps submit/start/end per request, so each completed request's
+    latency tiles into ``queue`` (submit -> start: replica wait) and
+    ``service`` (start -> end: handler time). Requests that failed in the
+    buffer (never started) are counted but not decomposed."""
+    log = service.request_log()
+    submit = np.asarray(log["submit"], dtype=np.float64)
+    start = np.asarray(log["start"], dtype=np.float64)
+    end = np.asarray(log["end"], dtype=np.float64)
+    done = (end >= 0.0) & (start >= 0.0)
+    return {"n_requests": len(submit),
+            "n_decomposed": int(done.sum()),
+            "phases": {
+                "queue": _stats(start[done] - submit[done]).as_dict(),
+                "service": _stats(end[done] - start[done]).as_dict()}}
 
 
 def _release_map(profiler) -> Tuple[Dict[int, float], Dict[int, int]]:
@@ -118,6 +150,7 @@ def _cores_of(d) -> int:
 
 def lifecycle_breakdown(tasks: Sequence, profiler=None,
                         by: Optional[str] = "backend",
+                        services: Sequence = (),
                         ) -> LifecycleBreakdown:
     """Decompose every completed task's lifecycle into the five phases and
     aggregate mean/p50/p99/max/sum per group (see module docs).
@@ -126,7 +159,8 @@ def lifecycle_breakdown(tasks: Sequence, profiler=None,
     instances, ``TaskCohort`` columns, ``CohortWave`` handles, mixed.
     ``profiler`` enables scheduler-hold attribution and pilot grouping
     (without it, holds fold into ``dispatch`` and every task's pilot is
-    unattributed)."""
+    unattributed). ``services`` adds per-service request phase splits
+    (:func:`service_request_breakdown`) under ``services``."""
     if by is not None and by not in _GROUP_KEYS:
         raise KeyError(f"unknown group key {by!r} (one of {_GROUP_KEYS})")
     objs, cohorts = _split_cohorts(tasks)
@@ -233,10 +267,12 @@ def lifecycle_breakdown(tasks: Sequence, profiler=None,
             lbl = "all"
         label_cols.append(np.full(c.n, code(lbl), dtype=np.int64))
 
+    svc_bd = {s.name: service_request_breakdown(s) for s in services}
+
     if not done_cols:
         empty = GroupBreakdown(0, {p: PhaseStats(0, 0.0, 0.0, 0.0, 0.0, 0.0)
                                    for p in PHASES}, 0.0, 0.0)
-        return LifecycleBreakdown(by, 0, n_skipped, empty, {})
+        return LifecycleBreakdown(by, 0, n_skipped, empty, {}, svc_bd)
 
     def cat(parts: List[np.ndarray]) -> np.ndarray:
         return parts[0] if len(parts) == 1 else np.concatenate(parts)
@@ -263,14 +299,7 @@ def lifecycle_breakdown(tasks: Sequence, profiler=None,
         phases: Dict[str, PhaseStats] = {}
         for name in PHASES:
             col = phase_cols[name] if mask is None else phase_cols[name][mask]
-            if len(col):
-                p50, p99 = np.percentile(col, (50.0, 99.0))
-                phases[name] = PhaseStats(len(col), float(col.mean()),
-                                          float(p50), float(p99),
-                                          float(col.max()),
-                                          float(col.sum()))
-            else:
-                phases[name] = PhaseStats(0, 0.0, 0.0, 0.0, 0.0, 0.0)
+            phases[name] = _stats(col)
         sp = span if mask is None else span[mask]
         ex = phase_cols["exec"] if mask is None else phase_cols["exec"][mask]
         cr = cores if mask is None else cores[mask]
@@ -286,4 +315,5 @@ def lifecycle_breakdown(tasks: Sequence, profiler=None,
         else:
             for c in uniq:
                 groups[label_names[int(c)]] = agg(labels_all == c)
-    return LifecycleBreakdown(by, len(span), n_skipped, total, groups)
+    return LifecycleBreakdown(by, len(span), n_skipped, total, groups,
+                              svc_bd)

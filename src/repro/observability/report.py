@@ -26,7 +26,7 @@ from typing import Any, Dict, List, Optional, Sequence
 
 from repro.core.analytics import (compute_metrics, fault_metrics,
                                   sched_metrics, service_metrics)
-from repro.observability.lifecycle import lifecycle_breakdown
+from repro.observability.lifecycle import PHASES, lifecycle_breakdown
 from repro.observability.timeseries import (inflight, occupancy, throughput)
 
 REPORT_VERSION = 1
@@ -64,7 +64,7 @@ class RunReport:
         ``cost`` — the report accounts for what it itself cost."""
         t0 = time.perf_counter()
         m = compute_metrics(tasks, total_cores, mode=mode)
-        bd = lifecycle_breakdown(tasks, profiler, by=by)
+        bd = lifecycle_breakdown(tasks, profiler, by=by, services=services)
         series: Dict[str, Any] = {}
         if with_series and m.n_done:
             step = dt if dt is not None else _auto_dt(m.makespan)
@@ -76,11 +76,9 @@ class RunReport:
                                                 step).as_dict()
         sched = None
         if sched_by is not None:
-            # sched_metrics walks object timestamps; cohort members are
-            # homogeneous passthrough waves, so objects carry the signal
-            from repro.core.analytics import _split_cohorts
-            objs, _ = _split_cohorts(tasks)
-            sched = sched_metrics(objs, by=sched_by).as_dict()
+            # cohort-aware: TaskCohort/CohortWave columns contribute their
+            # plan-time waits and served work alongside the object tasks
+            sched = sched_metrics(tasks, by=sched_by).as_dict()
         svc = {s.name: service_metrics(s).as_dict() for s in services}
         faults = (fault_metrics(profiler).as_dict()
                   if profiler is not None else None)
@@ -189,6 +187,14 @@ def render_payload(payload: Dict[str, Any]) -> str:
         for gname, g in (bd.get("groups") or {}).items():
             lines.append(f"  [{gname}] n={g['n']:,} "
                          f"exec_core_s={g['exec_core_s']:.4g}")
+    for sname, sp in ((bd or {}).get("services") or {}).items():
+        lines.append(f"-- service {sname} request phases "
+                     f"(n={sp.get('n_decomposed', 0):,}"
+                     f"/{sp.get('n_requests', 0):,})")
+        for pname, ph in (sp.get("phases") or {}).items():
+            lines.append(f"  {pname:<10}{ph['mean']:>12.4g}"
+                         f"{ph['p50']:>12.4g}{ph['p99']:>12.4g}"
+                         f"{ph['sum']:>14.4g}")
     series = payload.get("series") or {}
     for name, s in series.items():
         v = s.get("v") or []
@@ -223,3 +229,74 @@ def render_payload(payload: Dict[str, Any]) -> str:
             lines.append("  " + "  ".join(f"{k}={_fmt(v)}"
                                           for k, v in brief.items()))
     return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Cross-run diff (CLI: `report BASELINE.json CANDIDATE.json --tolerance`)
+# ---------------------------------------------------------------------------
+
+def diff_payloads(base: Dict[str, Any], cand: Dict[str, Any],
+                  tolerance: float = 0.10,
+                  ) -> "tuple[List[str], List[str]]":
+    """Compare two saved run payloads: per-phase mean deltas over the
+    lifecycle breakdown (hold/dispatch/queue/launch/exec) plus the
+    throughput/makespan deltas from ``metrics``. Returns the rendered diff
+    lines and the list of violations — a phase mean that grew, or a
+    throughput that shrank, by more than ``tolerance`` (relative). The CLI
+    exits nonzero when violations is non-empty, so a committed baseline
+    payload gates regressions in CI."""
+
+    def rel(a: float, b: float) -> float:
+        if a == 0.0:
+            return float("inf") if b else 0.0
+        return (b - a) / a
+
+    def title(p: Dict[str, Any]) -> str:
+        return str(p.get("benchmark") or p.get("title") or "run")
+
+    lines: List[str] = [f"=== run diff: {title(base)} -> {title(cand)} "
+                        f"(tolerance {tolerance:.0%}) ==="]
+    viols: List[str] = []
+
+    bp = (((base.get("breakdown") or {}).get("total") or {})
+          .get("phases") or {})
+    cp = (((cand.get("breakdown") or {}).get("total") or {})
+          .get("phases") or {})
+    if bp or cp:
+        lines.append(f"  {'phase':<10}{'base mean':>12}{'cand mean':>12}"
+                     f"{'delta':>9}")
+        for name in PHASES:
+            if name not in bp and name not in cp:
+                continue
+            a = (bp.get(name) or {}).get("mean", 0.0)
+            b = (cp.get(name) or {}).get("mean", 0.0)
+            d = rel(a, b)
+            worse = d > tolerance
+            mark = "  REGRESSION" if worse else ""
+            lines.append(f"  {name:<10}{a:>12.4g}{b:>12.4g}{d:>+9.1%}"
+                         f"{mark}")
+            if worse:
+                viols.append(f"phase {name} mean {a:.4g} -> {b:.4g} "
+                             f"({d:+.1%} > {tolerance:.0%})")
+
+    bm = base.get("metrics") or {}
+    cm = cand.get("metrics") or {}
+    for key, worse_when in (("throughput_avg", "down"),
+                            ("throughput_peak", "down"),
+                            ("makespan", "info")):
+        if key not in bm and key not in cm:
+            continue
+        a = float(bm.get(key, 0.0))
+        b = float(cm.get(key, 0.0))
+        d = rel(a, b)
+        worse = worse_when == "down" and d < -tolerance
+        mark = "  REGRESSION" if worse else ""
+        lines.append(f"  {key:<24}{a:>12.4g}{b:>12.4g}{d:>+9.1%}{mark}")
+        if worse:
+            viols.append(f"{key} {a:.4g} -> {b:.4g} "
+                         f"({d:+.1%} < -{tolerance:.0%})")
+    if viols:
+        lines.append(f"  -> {len(viols)} violation(s) over tolerance")
+    else:
+        lines.append("  -> within tolerance")
+    return lines, viols

@@ -24,7 +24,7 @@ from __future__ import annotations
 from typing import Any, Dict, List, Optional, Sequence, Union
 
 from repro.core.pilot import Pilot, PilotDescription, PilotState
-from repro.core.task import Task, TaskDescription, new_uid
+from repro.core.task import DescriptionBatch, Task, TaskDescription, new_uid
 from repro.runtime.engine import Engine, RealEngine, SimEngine
 
 
@@ -185,8 +185,11 @@ class TaskManager:
         return self._pilots[0].agent
 
     def submit_tasks(self, descriptions: Union[TaskDescription,
-                                               Sequence[TaskDescription]]
-                     ) -> Union[Task, List[Task]]:
+                                               Sequence[TaskDescription],
+                                               DescriptionBatch]
+                     ) -> Union[Task, List[Task], Any]:
+        if isinstance(descriptions, DescriptionBatch):
+            return self.submit_batch(descriptions)
         single = isinstance(descriptions, TaskDescription)
         descs = [descriptions] if single else list(descriptions)
         if self.session.closed:
@@ -207,21 +210,36 @@ class TaskManager:
             self.tasks[t.uid] = t
         return tasks[0] if single else tasks
 
-    def submit_wave(self, template: TaskDescription, n: int):
-        """Bulk-submit ``n`` clones of ``template`` to the (single) bound
-        pilot, preferring the cohort fast path (columnar, O(1) memory per
-        task at submit). Falls back to materialized object tasks when the
-        wave is not cohort-eligible. Returns a ``CohortWave`` or list."""
+    def submit_batch(self, batch: DescriptionBatch):
+        """Submit a columnar :class:`DescriptionBatch` through the campaign
+        scheduler: passthrough hands the whole batch to the least-loaded
+        pilot (cohort-planned when eligible, bulk object ingestion over
+        lazy row views otherwise); gated policies hold it as row-index
+        slices and release on placement. Returns a ``CohortWave``, a task
+        list, or the scheduler's batch handle — all waitable via
+        ``wait_tasks``."""
         if self.session.closed:
             raise RuntimeError(f"{self.uid}: session {self.session.uid} "
                                f"is closed")
-        wave = self.agent.submit_wave(template, n)
-        if isinstance(wave, list):
-            for t in wave:
-                self.tasks[t.uid] = t
-        else:
-            self._waves.append(wave)
-        return wave
+        if not self._pilots:
+            raise RuntimeError(f"{self.uid}: no pilots added")
+        tasks = self.scheduler.submit(batch)
+        if not isinstance(tasks, list):
+            self._waves.append(tasks)      # CohortWave or _BatchRef (.done)
+            return tasks
+        for t in tasks:
+            self.tasks[t.uid] = t
+        return tasks
+
+    def submit_wave(self, template: TaskDescription, n: int):
+        """Bulk-submit ``n`` clones of ``template`` as one all-scalar
+        :class:`DescriptionBatch` (columnar, O(1) memory per task at
+        submit), preferring the cohort fast path. Falls back to object
+        tasks over lazy row views when the wave is not cohort-eligible.
+        Returns a ``CohortWave`` or list."""
+        if n <= 0:
+            return []
+        return self.submit_batch(DescriptionBatch.from_template(template, n))
 
     # ------------------------------------------------------------- services
     def start_service(self, handler=None, *, replicas: int = 2,

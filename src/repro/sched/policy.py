@@ -21,6 +21,8 @@ from __future__ import annotations
 from collections import deque
 from typing import Deque, Dict, List, Optional
 
+import numpy as np
+
 from repro.core import calibration as CAL
 from repro.core.task import Task
 
@@ -61,14 +63,88 @@ class _Entry:
         return self.task.description.share
 
 
+class _Run:
+    """A contiguous slice of one admitted :class:`DescriptionBatch`, held
+    in a policy queue as row indices only: entries materialize one at a
+    time from the head (``ref.materialize`` builds the Task + _Entry), so
+    a held million-row batch costs the queue one object plus an index
+    array. ``ref`` is the scheduler's _BatchRef (seq block, submit time,
+    materialization hook)."""
+
+    __slots__ = ("ref", "rows", "pos")
+
+    def __init__(self, ref, rows):
+        self.ref = ref
+        self.rows = rows
+        self.pos = 0
+
+    def __len__(self) -> int:
+        return len(self.rows) - self.pos
+
+    @property
+    def head_seq(self) -> int:
+        return self.ref.seq0 + int(self.rows[self.pos])
+
+    @property
+    def head_t_submit(self) -> float:
+        return self.ref.t_submit
+
+    def pop_head(self) -> _Entry:
+        row = int(self.rows[self.pos])
+        self.pos += 1
+        return self.ref.materialize(row)
+
+
+def _head_key(item):
+    """(seq, t_submit) of a queue head, entry or run alike."""
+    if isinstance(item, _Run):
+        return item.head_seq, item.head_t_submit
+    return item.seq, item.t_submit
+
+
+def _pop_front(q: Deque) -> Optional[_Entry]:
+    """Pop the next entry from a deque of entries and runs, materializing
+    from the head run when one is in front (empty runs are dropped)."""
+    while q:
+        head = q[0]
+        if isinstance(head, _Run):
+            if len(head) == 0:
+                q.popleft()
+                continue
+            e = head.pop_head()
+            if len(head) == 0:
+                q.popleft()
+            return e
+        return q.popleft()
+    return None
+
+
+def _live_head(q: Deque):
+    """The queue's first non-exhausted item, dropping spent runs."""
+    while q:
+        head = q[0]
+        if isinstance(head, _Run) and len(head) == 0:
+            q.popleft()
+            continue
+        return head
+    return None
+
+
 class QueuePolicy:
-    """Ordering-policy interface: push entries, pop the next candidate,
-    requeue the ones the placement pass could not release (order
-    preserved), and charge served work on actual release."""
+    """Ordering-policy interface: push entries (or whole batch row slices),
+    pop the next candidate, requeue the ones the placement pass could not
+    release (order preserved), and charge served work on actual release."""
 
     name = "fifo"
 
     def push(self, entry: _Entry) -> None:
+        raise NotImplementedError
+
+    def push_batch(self, ref, rows) -> None:
+        """Admit ``rows`` (int64 row indices, submission order) of the
+        batch behind ``ref`` without materializing entries; ordering
+        policies split the slice on column codes (priority classes,
+        tenants) and hold one :class:`_Run` per class."""
         raise NotImplementedError
 
     def pop(self, now: float) -> Optional[_Entry]:
@@ -91,19 +167,30 @@ class FIFOPolicy(QueuePolicy):
     name = "fifo"
 
     def __init__(self):
-        self._q: Deque[_Entry] = deque()
+        self._q: Deque = deque()
+        self._n = 0
 
     def push(self, entry: _Entry) -> None:
         self._q.append(entry)
+        self._n += 1
+
+    def push_batch(self, ref, rows) -> None:
+        if len(rows):
+            self._q.append(_Run(ref, rows))
+            self._n += len(rows)
 
     def pop(self, now: float) -> Optional[_Entry]:
-        return self._q.popleft() if self._q else None
+        e = _pop_front(self._q)
+        if e is not None:
+            self._n -= 1
+        return e
 
     def requeue(self, entries: List[_Entry]) -> None:
         self._q.extendleft(reversed(entries))
+        self._n += len(entries)
 
     def __len__(self) -> int:
-        return len(self._q)
+        return self._n
 
 
 class PriorityPolicy(QueuePolicy):
@@ -125,22 +212,46 @@ class PriorityPolicy(QueuePolicy):
         q.append(entry)
         self._n += 1
 
+    def push_batch(self, ref, rows) -> None:
+        """Split the slice into priority classes on the batch's priority
+        column (rows stay in submission order within a class — argsort is
+        implicit in the per-class masks)."""
+        batch = ref.batch
+        prio = batch.scalar("priority", None)
+        if prio is None:
+            col = batch.col("priority")[rows]
+            classes = np.unique(col)
+        else:
+            col = None
+            classes = (prio,)
+        for p in classes:
+            p = int(p)
+            sub = rows if col is None else rows[col == p]
+            if not len(sub):
+                continue
+            q = self._classes.get(p)
+            if q is None:
+                q = self._classes[p] = deque()
+            q.append(_Run(ref, sub))
+            self._n += len(sub)
+
     def pop(self, now: float) -> Optional[_Entry]:
         best_q = None
         best_key = None
         rate = self.aging_rate
         for prio, q in self._classes.items():
-            if not q:
+            head = _live_head(q)
+            if head is None:
                 continue
-            head = q[0]
-            key = (prio + rate * (now - head.t_submit), -head.seq)
+            seq, ts = _head_key(head)
+            key = (prio + rate * (now - ts), -seq)
             if best_key is None or key > best_key:
                 best_key = key
                 best_q = q
         if best_q is None:
             return None
         self._n -= 1
-        return best_q.popleft()
+        return _pop_front(best_q)
 
     def requeue(self, entries: List[_Entry]) -> None:
         classes = self._classes
@@ -177,20 +288,51 @@ class FairSharePolicy(QueuePolicy):
         q.append(entry)
         self._n += 1
 
+    def push_batch(self, ref, rows) -> None:
+        """Split the slice per tenant on the batch's interned tenant codes
+        (rows stay in submission order within a tenant); each tenant's
+        weight updates from its last row's share, matching the per-entry
+        push semantics."""
+        batch = ref.batch
+        tenant = batch.scalar("tenant", None)
+        if tenant is not None:
+            groups = [(tenant, rows)]
+        else:
+            codes, pool = batch.str_codes("tenant")
+            codes = codes[rows]
+            groups = []
+            for c in np.unique(codes):
+                sub = rows[codes == c]
+                if len(sub):
+                    groups.append((pool[int(c)], sub))
+        share_u = batch.scalar("share", None)
+        share_col = None if share_u is not None else batch.col("share")
+        for t, sub in groups:
+            q = self._tenants.get(t)
+            if q is None:
+                q = self._tenants[t] = deque()
+                self._served.setdefault(t, 0.0)
+            last_share = (share_u if share_u is not None
+                          else float(share_col[int(sub[-1])]))
+            self._weights[t] = max(last_share, 1e-9)
+            q.append(_Run(ref, sub))
+            self._n += len(sub)
+
     def pop(self, now: float) -> Optional[_Entry]:
         best_t = None
         best_key = None
         for t, q in self._tenants.items():
-            if not q:
+            head = _live_head(q)
+            if head is None:
                 continue
-            key = (self._served[t] / self._weights[t], q[0].seq)
+            key = (self._served[t] / self._weights[t], _head_key(head)[0])
             if best_key is None or key < best_key:
                 best_key = key
                 best_t = t
         if best_t is None:
             return None
         self._n -= 1
-        return self._tenants[best_t].popleft()
+        return _pop_front(self._tenants[best_t])
 
     def requeue(self, entries: List[_Entry]) -> None:
         tenants = self._tenants

@@ -44,8 +44,11 @@ from __future__ import annotations
 import itertools
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.core.resources import NodeClaim, NodePool
-from repro.core.task import Task, TaskDescription, TaskState, new_uid
+from repro.core.task import (DescriptionBatch, Task, TaskDescription,
+                             TaskState, _STATE_EVENT, new_uid)
 from repro.sched.policy import (FIFOPolicy, QueuePolicy, _Entry,
                                 make_policy)
 
@@ -69,6 +72,16 @@ TRACE_NAMES: Dict[str, str] = {
 def release_name(index: int) -> str:
     """Trace name of the per-pilot release track for view ``index``."""
     return TRACE_NAMES["release_pilot"].format(i=index)
+
+
+def _task_eid(profiler, task: Task) -> int:
+    """The task's trace entity id: reuse the one its state rows use (set by
+    ``advance`` or block-reserved by the batch paths) so hold/release rows
+    join with the lifecycle rows; intern the uid only for tasks that never
+    stamped through this profiler."""
+    if task._trace_prof is profiler:
+        return task._trace_eid
+    return profiler.entity_id(task.uid)
 
 
 class _PilotView:
@@ -104,6 +117,90 @@ class _PilotView:
                     rate += nominal()
             est += depth / max(rate, 1.0)
         return est
+
+
+class _BatchRef:
+    """One admission-gated :class:`DescriptionBatch`: the policy queues
+    hold row-index slices (:class:`repro.sched.policy._Run`) against this
+    handle, and rows materialize into ``Task`` + ``_Entry`` objects only
+    when the placement pass pops them. The whole batch's SCHEDULING
+    transition was bulk-stamped at admission over a reserved entity block,
+    so a materialized task's trace entity is ``eid_base + row`` — no
+    per-task trace work happens before release."""
+
+    __slots__ = ("sched", "batch", "eid_base", "seq0", "t_submit", "origin",
+                 "resubmit", "n_pending", "pending", "tasks", "_uid_rows",
+                 "_uid_prefix", "_uid_start")
+
+    def __init__(self, sched: "CampaignScheduler", batch: DescriptionBatch,
+                 eid_base: int, seq0: int, t_submit: float,
+                 origin: str = "", resubmit: bool = False):
+        self.sched = sched
+        self.batch = batch
+        self.eid_base = eid_base
+        self.seq0 = seq0
+        self.t_submit = t_submit
+        self.origin = origin
+        self.resubmit = resubmit
+        self.n_pending = batch.n
+        self.pending = np.ones(batch.n, dtype=bool)
+        self.tasks: List[Task] = []       # materialized rows, release order
+        self._uid_rows: Optional[Dict[str, int]] = None
+        if batch.has_explicit_uids():
+            self._uid_prefix = None
+            self._uid_start = -1
+        else:
+            self._uid_prefix, self._uid_start = batch.uid_block
+
+    def materialize(self, row: int) -> _Entry:
+        """Build the object task for one popped row (state/timestamp set
+        directly — the trace row already exists from the admission bulk
+        stamp) and register it as a live dependency target."""
+        sched = self.sched
+        task = Task(self.batch.view(row))
+        task.state = TaskState.SCHEDULING
+        task.timestamps["SCHEDULING"] = self.t_submit
+        task._trace_prof = sched.engine.profiler
+        task._trace_eid = self.eid_base + row
+        self.pending[row] = False
+        self.n_pending -= 1
+        self.tasks.append(task)
+        e = _Entry(task, self.seq0 + row, self.t_submit, self.origin,
+                   self.resubmit)
+        sched._entry_by_uid[task.uid] = e
+        if self.n_pending == 0:
+            sched._batch_refs.remove(self)
+        return e
+
+    def row_of(self, uid: str) -> Optional[int]:
+        """Row index of ``uid`` in this batch, or None. Block-uid batches
+        parse the suffix; explicit-uid batches build a lookup lazily on the
+        first dependency query."""
+        if self._uid_prefix is not None:
+            pfx, _, num = uid.rpartition(".")
+            if pfx != self._uid_prefix or not num.isdigit():
+                return None
+            row = int(num) - self._uid_start
+            return row if 0 <= row < self.batch.n else None
+        if self._uid_rows is None:
+            self._uid_rows = {self.batch.uid(i): i
+                              for i in range(self.batch.n)}
+        return self._uid_rows.get(uid)
+
+    @property
+    def done(self) -> bool:
+        """Every row released and terminal (the ``wait_tasks`` surface)."""
+        return self.n_pending == 0 and all(t.done for t in self.tasks)
+
+    def __len__(self) -> int:
+        return self.batch.n
+
+    def __iter__(self):
+        return iter(self.tasks)
+
+    def __repr__(self):
+        return (f"<_BatchRef n={self.batch.n} pending={self.n_pending} "
+                f"seq0={self.seq0}>")
 
 
 class CampaignScheduler:
@@ -147,6 +244,7 @@ class CampaignScheduler:
         # their own FIFO served before the policy queue each pass, where
         # they place outright or claim a draining node set (gang_reserve)
         self._gangs: List[_Entry] = []
+        self._batch_refs: List[_BatchRef] = []   # gated batches, rows pending
         self._entry_by_uid: Dict[str, _Entry] = {}
         self._dep_wait: Dict[str, List[_Entry]] = {}
         self._n_dep_held = 0
@@ -210,7 +308,7 @@ class CampaignScheduler:
         return (not self.admission and not self._released
                 and not self._dep_wait and not self._entry_by_uid
                 and not self._gangs and not len(self.policy)
-                and not self._done_callbacks)
+                and not self._batch_refs and not self._done_callbacks)
 
     # ------------------------------------------------------------- properties
     @property
@@ -232,8 +330,61 @@ class CampaignScheduler:
         return sum(v.agent.free_cores for v in self.views)
 
     # ------------------------------------------------------------------ submit
-    def submit(self, descriptions) -> List[Task]:
+    def submit(self, descriptions):
+        """Submit a description list or a :class:`DescriptionBatch`. Lists
+        return ``List[Task]``; batches return whatever the native batch
+        path produces — a ``CohortWave`` / task list in passthrough, a
+        :class:`_BatchRef` when admission-gated."""
+        if isinstance(descriptions, DescriptionBatch):
+            return self._submit_batch(descriptions)
         return self._submit(list(descriptions), origin="", resubmit=False)
+
+    def _submit_batch(self, batch: DescriptionBatch):
+        if not self.views:
+            raise RuntimeError(f"{self.uid}: no pilots added")
+        # fallback gates: rare-field rows (deps, services) and gangs keep
+        # the per-entry object path — their handling is inherently per-row
+        if (batch.has_field("after") or batch.has_field("service")
+                or batch.has_field("nodes")):
+            return self._submit(batch.to_descriptions(), origin="",
+                                resubmit=False)
+        engine = self.engine
+        with engine.lock:
+            if not self.admission:
+                view = min(self._live, key=lambda v: v.agent.n_unfinished)
+                tasks = view.agent.submit(batch)
+                engine.profiler.record(engine.now(), self.uid,
+                                       TRACE_NAMES["release"],
+                                       {"n": batch.n, "pilot": view.index})
+                return tasks
+            return self._submit_batch_gated(batch)
+
+    def _submit_batch_gated(self, batch: DescriptionBatch) -> _BatchRef:
+        """Admission-gated batch: one entity-block reservation plus one
+        ``record_fast_many`` stamps SCHEDULING for every row, a sequence
+        block fixes the arrival order, and the policy queue holds only row
+        indices (split on priority/tenant codes by ``push_batch``) —
+        object tasks exist only for rows the placement pass releases."""
+        engine = self.engine
+        now = engine.now()
+        profiler = engine.profiler
+        n = batch.n
+        base = profiler.reserve_entities(n, batch.uid)
+        st = TaskState.SCHEDULING
+        nids = profiler.memo_nids
+        nid = nids.get(st)
+        if nid is None:
+            nid = nids[st] = profiler.name_id(_STATE_EVENT[st])
+        profiler.reserve_rows(n)
+        profiler.record_fast_many(
+            np.full(n, now), np.arange(base, base + n, dtype=np.int64), nid)
+        seq0 = next(self._seq)
+        self._seq = itertools.count(seq0 + n)
+        ref = _BatchRef(self, batch, base, seq0, now)
+        self._batch_refs.append(ref)
+        self.policy.push_batch(ref, np.arange(n, dtype=np.int64))
+        self._pass()
+        return ref
 
     def resubmit(self, descriptions, origin: str = "") -> List[Task]:
         """Scheduler-mediated resubmission (service restarts / scale-ups):
@@ -342,6 +493,10 @@ class CampaignScheduler:
         e = self._entry_by_uid.get(uid)
         if e is not None:
             return not e.task.done
+        for ref in self._batch_refs:
+            row = ref.row_of(uid)
+            if row is not None and ref.pending[row]:
+                return True      # still held as a policy-queue row index
         for v in self.views:
             t = v.agent.tasks.get(uid)
             if t is not None:
@@ -367,7 +522,7 @@ class CampaignScheduler:
             self._dep_wait.setdefault(u, []).append(e)
         self._n_dep_held += 1
         self.engine.profiler.record_fast(
-            e.t_submit, self.engine.profiler.entity_id(e.task.uid),
+            e.t_submit, _task_eid(self.engine.profiler, e.task),
             self._nid_dep)
         return True
 
@@ -408,7 +563,7 @@ class CampaignScheduler:
                 view.agent.submit_prepared([e.task])
             self.engine.profiler.record_fast(
                 self.engine.now(),
-                self.engine.profiler.entity_id(e.task.uid),
+                _task_eid(self.engine.profiler, e.task),
                 view.nid_release)
 
     # ------------------------------------------------------------- lifecycle
@@ -579,7 +734,7 @@ class CampaignScheduler:
                         if not e.held_recorded:
                             e.held_recorded = True
                             profiler.record_fast(
-                                now, profiler.entity_id(task.uid),
+                                now, _task_eid(profiler, task),
                                 self._nid_hold)
                         held_gangs.append(e)
                         continue
@@ -607,7 +762,7 @@ class CampaignScheduler:
                     if not e.held_recorded:
                         e.held_recorded = True
                         profiler.record_fast(
-                            now, profiler.entity_id(task.uid),
+                            now, _task_eid(profiler, task),
                             self._nid_hold)
                     if not blocked:
                         self._maybe_claim_head(e)
@@ -630,7 +785,7 @@ class CampaignScheduler:
         bulk: List[Task] = []
         for e in entries:
             self._entry_by_uid.pop(e.task.uid, None)
-            profiler.record_fast(now, profiler.entity_id(e.task.uid),
+            profiler.record_fast(now, _task_eid(profiler, e.task),
                                  view.nid_release)
             if e.resubmit:
                 view.agent.resubmit_prepared([e.task], e.origin)

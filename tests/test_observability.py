@@ -415,3 +415,79 @@ def test_run_report_with_services_and_sched():
     assert "faults" in payload                  # profiler given
     assert payload["sched"]["fairness"] == pytest.approx(1.0)
     assert "throughput" in payload["series"]
+
+
+def test_service_request_phase_breakdown():
+    """Satellite: lifecycle_breakdown decomposes each service's request
+    latency into queue (submit->start) and service (start->end) phases,
+    and they tile the latency; the split flows into RunReport + render."""
+    from repro.observability.lifecycle import service_request_breakdown
+
+    with Session(mode="sim", seed=0) as s:
+        pilot = PilotManager(s).submit_pilots(PilotDescription(
+            nodes=8, backends={"flux": {"partitions": 2}}))
+        tmgr = TaskManager(s)
+        tmgr.add_pilots(pilot)
+        svc = tmgr.start_service(replicas=2, nodes=1, rate=1.0)
+        svc.submit_requests(range(20))
+        svc.stop()
+        assert tmgr.wait_tasks()
+        sbd = service_request_breakdown(svc)
+        assert sbd["n_requests"] == 20 and sbd["n_decomposed"] == 20
+        q, sv = sbd["phases"]["queue"], sbd["phases"]["service"]
+        assert q["n"] == sv["n"] == 20
+        m = A.service_metrics(svc)
+        # queue + service tiles the mean latency
+        assert abs((q["sum"] + sv["sum"]) / 20 - m.latency_mean) <= REL
+        # service phase matches the metrics family's handler time
+        assert abs(sv["mean"] - m.service_time_mean) <= REL
+        bd = lifecycle_breakdown(tmgr.tasks.values(), s.profiler,
+                                 services=[svc])
+        assert bd.services[svc.name] == sbd
+        rep = RunReport.collect(list(tmgr.tasks.values()),
+                                pilot.agent.total_cores,
+                                profiler=s.profiler, services=[svc])
+        assert rep.breakdown["services"][svc.name]["phases"]["queue"] == \
+            sbd["phases"]["queue"]
+        assert "request phases" in rep.render()
+
+
+def test_report_diff_cli(tmp_path):
+    """Satellite: `report BASELINE CANDIDATE --tolerance` prints per-phase
+    and throughput deltas and exits nonzero on regressions only."""
+    import copy
+
+    tasks, cores, prof, _ = _run(n=200)
+    base = RunReport.collect(tasks, cores, profiler=prof,
+                             extra={"benchmark": "base"}).to_json()
+    a = tmp_path / "a.json"
+    with open(a, "w") as fh:
+        json.dump(base, fh)
+
+    # identical candidate: within tolerance
+    b_same = tmp_path / "b_same.json"
+    with open(b_same, "w") as fh:
+        json.dump(base, fh)
+    assert obs_main(["report", str(a), str(b_same)]) == 0
+
+    # regressed candidate: exec phase mean x2, throughput halved
+    worse = copy.deepcopy(base)
+    worse["breakdown"]["total"]["phases"]["exec"]["mean"] *= 2.0
+    worse["metrics"]["throughput_avg"] *= 0.5
+    b_worse = tmp_path / "b_worse.json"
+    with open(b_worse, "w") as fh:
+        json.dump(worse, fh)
+    assert obs_main(["report", str(a), str(b_worse)]) == 1
+    # a huge tolerance swallows the regression
+    assert obs_main(["report", str(a), str(b_worse),
+                     "--tolerance", "5.0"]) == 0
+    # improvements never trip the gate
+    better = copy.deepcopy(base)
+    better["breakdown"]["total"]["phases"]["exec"]["mean"] *= 0.5
+    better["metrics"]["throughput_avg"] *= 2.0
+    b_better = tmp_path / "b_better.json"
+    with open(b_better, "w") as fh:
+        json.dump(better, fh)
+    assert obs_main(["report", str(a), str(b_better)]) == 0
+    # three positional files is an error
+    assert obs_main(["report", str(a), str(a), str(a)]) == 1
