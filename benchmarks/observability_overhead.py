@@ -9,6 +9,11 @@ throughput_scale flux-x8 configuration, whose committed wall time in
   always on), then the full post-hoc stack: RunReport.collect (all
   metric families + lifecycle breakdown + reconstructed timeseries)
   plus a capped Chrome trace export, each stage timed.
+* **stream** (``--stream``) — campaign with a full streaming Watcher
+  attached: every tick folds the trace delta into the live aggregators
+  (throughput/inflight/occupancy levels + lifecycle breakdown) and runs
+  the health rules. The streamed campaign wall is held to the same 10%
+  band, and the per-tick fold cost is reported.
 
 Gates (exit nonzero on miss):
 
@@ -16,12 +21,15 @@ Gates (exit nonzero on miss):
   1.10 x the committed BENCH_runtime.json wall for the same
   (config, n_tasks) tier — watching the run live must fit inside the
   same 10% band the campaign itself is held to;
+* with ``--stream``, the *streamed campaign* wall (full Watcher folding
+  every tick) is held to the same 1.10x band;
 * post-hoc analysis (RunReport.collect) < 2s at 1M tasks.
 
 Usage:
     PYTHONPATH=src python benchmarks/observability_overhead.py          # 10k + 1M
     PYTHONPATH=src python benchmarks/observability_overhead.py --quick  # CI: same
     PYTHONPATH=src python benchmarks/observability_overhead.py --scales 10000
+    PYTHONPATH=src python benchmarks/observability_overhead.py --stream
 """
 from __future__ import annotations
 
@@ -35,7 +43,8 @@ from typing import Dict, List, Optional
 
 from repro.core.pilot import PilotDescription
 from repro.core.task import DescriptionBatch, TaskDescription
-from repro.observability import LiveSampler, RunReport, export_chrome_trace
+from repro.observability import (LiveSampler, RunReport, Watcher,
+                                 export_chrome_trace)
 from repro.runtime import PilotManager, Session, TaskManager
 
 DEFAULT_SCALES = (10_000, 1_000_000)
@@ -105,6 +114,47 @@ def run_campaign(n_tasks: int, seed: int, observe: bool) -> Dict:
         return out
 
 
+def run_streamed(n_tasks: int, seed: int) -> Dict:
+    """Same campaign with a full streaming Watcher riding the drain:
+    every tick folds the new trace rows into the live aggregators and
+    evaluates the health rules, so this wall is the true cost of
+    watching with streaming analytics on. At drain the folded totals
+    must match the task table exactly (cross-check, not a timing)."""
+    t0 = time.time()
+    with Session(mode="sim", seed=seed) as session:
+        pilot = PilotManager(session).submit_pilots(
+            PilotDescription(nodes=NODES,
+                             backends={"flux": {"partitions": 8}}))
+        tmgr = TaskManager(session)
+        tmgr.add_pilots(pilot)
+        if n_tasks >= 1_000_000:
+            payload = DescriptionBatch.from_template(
+                TaskDescription(cores=1, duration=0.0), n_tasks)
+        else:
+            payload = [TaskDescription(cores=1, duration=0.0)
+                       for _ in range(n_tasks)]
+        tmgr.submit_tasks(payload)
+        watcher = Watcher(pilot.agent, interval=1.0).start()
+        tmgr.wait_tasks()
+        campaign_wall = time.time() - t0
+        watcher.finalize()
+        m = watcher.metrics()
+        if m["n_done"] != n_tasks:
+            raise AssertionError(
+                f"streamed fold saw {m['n_done']:,} completions, "
+                f"expected {n_tasks:,}")
+        ticks = max(watcher.n_ticks, 1)
+        return {
+            "stream_campaign_wall_s": round(campaign_wall, 3),
+            "stream_fold_wall_s": round(watcher.fold_wall_s, 3),
+            "stream_fold_per_tick_ms": round(
+                1e3 * watcher.fold_wall_s / ticks, 3),
+            "stream_ticks": watcher.n_ticks,
+            "stream_rows_folded": watcher.n_rows_folded,
+            "stream_alerts": len(watcher.monitor.alerts),
+        }
+
+
 def _exec_share(report: RunReport) -> float:
     total = report.breakdown["total"]
     span = total["span_sum"] or 1.0
@@ -132,6 +182,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--runtime-baseline", default="BENCH_runtime.json",
                     help="committed throughput_scale results; the obs-on "
                          "wall must stay within the 10%% band of these")
+    ap.add_argument("--stream", action="store_true",
+                    help="also run the streaming-Watcher lane per scale "
+                         "and gate its campaign wall to the same band")
     ap.add_argument("--no-regress-check", action="store_true")
     ap.add_argument("--output", default="BENCH_observability.json")
     args = ap.parse_args(argv)
@@ -145,6 +198,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         on = run_campaign(n, args.seed, observe=True)
         r = {**on, "campaign_only_wall_s": off["wall_s"],
              "obs_overhead_s": round(on["wall_s"] - off["wall_s"], 3)}
+        if args.stream:
+            r.update(run_streamed(n, args.seed))
         base = baseline.get((r["config"], n))
         if base is not None:
             r["runtime_baseline_wall_s"] = base
@@ -155,16 +210,29 @@ def main(argv: Optional[List[str]] = None) -> int:
                     f"{r['campaign_wall_s']:.2f}s exceeds "
                     f"{WALL_BAND:.0%} of the committed runtime baseline "
                     f"{base:.2f}s")
+            if (args.stream and not args.no_regress_check
+                    and n >= 1_000_000
+                    and r["stream_campaign_wall_s"] > WALL_BAND * base):
+                failures.append(
+                    f"streamed campaign wall at n={n:,}: "
+                    f"{r['stream_campaign_wall_s']:.2f}s exceeds "
+                    f"{WALL_BAND:.0%} of the committed runtime baseline "
+                    f"{base:.2f}s")
         if n >= 1_000_000 and r["analysis_wall_s"] > ANALYSIS_GATE_S:
             failures.append(
                 f"analysis at n={n:,} took {r['analysis_wall_s']:.2f}s "
                 f"(gate {ANALYSIS_GATE_S:.1f}s)")
         results.append(r)
-        print(f"n={n:>9,}  campaign={r['campaign_only_wall_s']:>7.2f}s  "
-              f"observed={r['campaign_wall_s']:>7.2f}s  "
-              f"analysis={r['analysis_wall_s']:>6.3f}s  "
-              f"export={r['export_wall_s']:>6.3f}s  "
-              f"events/task={r['cost']['events_per_task']}", flush=True)
+        line = (f"n={n:>9,}  campaign={r['campaign_only_wall_s']:>7.2f}s  "
+                f"observed={r['campaign_wall_s']:>7.2f}s  "
+                f"analysis={r['analysis_wall_s']:>6.3f}s  "
+                f"export={r['export_wall_s']:>6.3f}s  "
+                f"events/task={r['cost']['events_per_task']}")
+        if args.stream:
+            line += (f"  streamed={r['stream_campaign_wall_s']:>7.2f}s "
+                     f"(fold {r['stream_fold_per_tick_ms']:.2f}ms/tick "
+                     f"x {r['stream_ticks']})")
+        print(line, flush=True)
 
     RunReport(extra={
         "benchmark": "observability_overhead",
@@ -173,7 +241,10 @@ def main(argv: Optional[List[str]] = None) -> int:
                      "with LiveSampler + RunReport.collect + capped Chrome "
                      "export; the observed campaign wall is gated to 110% "
                      "of the committed BENCH_runtime wall, post-hoc "
-                     "analysis gated to <2s at 1M"),
+                     "analysis gated to <2s at 1M; --stream adds a third "
+                     "pass with a full streaming Watcher (per-tick delta "
+                     "folds + health rules) held to the same 110% band"),
+        "stream_lane": bool(args.stream),
         "nodes": NODES,
         "seed": args.seed,
         "analysis_gate_s": ANALYSIS_GATE_S,

@@ -301,6 +301,45 @@ class Profiler:
         for row in self.rows_np(name):
             yield self._event_at(int(row))
 
+    # ------------------------------------------------------- cursor support
+    # (repro.observability.stream.TraceCursor): streaming readers poll the
+    # trace in O(rows-appended-since-last-poll) — one bounded copy of the
+    # raw columns per poll, never a whole-trace scan or index build.
+
+    @property
+    def n_rows(self) -> int:
+        """Live row count (the high-water mark a cursor polls against)."""
+        return self._n
+
+    def n_names(self) -> int:
+        """Count of interned event names; names are append-only, so a
+        cursor detects newly-appearing names (e.g. per-pilot release
+        tracks) by watching this grow and resolving ``name_of``."""
+        return len(self._names)
+
+    def nid_of(self, name: str) -> Optional[int]:
+        """Interned id of ``name`` (None if never recorded) — streaming
+        readers match delta rows against watched names by id, not string."""
+        return self._name_ids.get(name)
+
+    def tail(self, lo: int, copy: bool = True):
+        """``(times, packed_ids, hi)`` for rows ``[lo, n)`` — the delta a
+        :class:`~repro.observability.stream.TraceCursor` folds.  Copies by
+        default: a later append may grow (and so orphan) the underlying
+        buffers while the caller still holds the delta.  ``copy=False``
+        returns views — valid only until the next append — for callers
+        that consume the delta immediately under the engine lock."""
+        n = self._n
+        if lo >= n:
+            return (np.empty(0, dtype=np.float64),
+                    np.empty(0, dtype=np.int64), n)
+        t, i = self._times[lo:n], self._ids[lo:n]
+        return (t.copy(), i.copy(), n) if copy else (t, i, n)
+
+    def payload_at(self, row: int):
+        """Sparse payload of one row (None for payload-free events)."""
+        return self._data.get(row)
+
     def window(self, name: str) -> Optional[tuple]:
         ts = self.times(name)
         return (min(ts), max(ts)) if ts else None

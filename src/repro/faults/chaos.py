@@ -240,6 +240,11 @@ class ChaosController:
 
     # ---------------------------------------------------------------- stats
     def stats(self) -> Dict[str, int]:
+        # lazy import: observability consumes this package (alert rows in
+        # RunReport), so the constant cannot be imported at module load
+        from repro.observability.stream import ALERT_EVENT
+
+        prof = self.engine.profiler
         return {
             "node_failures": sum(1 for i in self.injected
                                  if i["kind"] == "node"),
@@ -247,4 +252,8 @@ class ChaosController:
                                   if i["kind"] == "pilot"),
             "tasks_killed": sum(i["n_victims"] for i in self.injected),
             "skipped": self.skipped,
+            # obs:alert rows any live Watcher recorded during the chaos
+            # run — injected faults should surface as streamed alerts
+            "alerts_observed": (len(prof.rows_np(ALERT_EVENT))
+                                if prof.has_name(ALERT_EVENT) else 0),
         }

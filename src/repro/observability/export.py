@@ -9,10 +9,15 @@ denominator every trace viewer accepts:
   other;
 * ``"X"`` (complete) events for task execution spans, RUNNING -> DONE,
   with ``ts``/``dur`` in microseconds as the spec requires (input
-  timestamps are seconds, virtual or wall);
+  timestamps are seconds, virtual or wall); passing ``services=`` adds
+  one process per service whose completed request spans (submit -> end)
+  render as ``req.{rid}`` slices under the same global slice cap;
 * ``"C"`` (counter) tracks for the reconstructed timeseries — core
   occupancy, scheduler hold depth, completion throughput — so the gauge
   curves render under the slices;
+* ``"i"`` (instant) events for chaos injections (``chaos:node_fail`` /
+  ``chaos:pilot_fail`` / ``chaos:skip``) and streamed health alerts
+  (``obs:alert``), so fault timing lines up visually with its impact;
 * ``"M"`` (metadata) events naming every process and thread.
 
 Slices are capped (``max_slices``, evenly strided so the whole run stays
@@ -36,12 +41,13 @@ from repro.observability.timeseries import (Series, occupancy,
 _US = 1e6                     # seconds -> microseconds
 
 
-def _slice_segments(tasks: Sequence) -> List[tuple]:
-    """Completed-task slices as ``(backend, starts, ends, label_fn)``
-    segments — one per object-task backend plus one per cohort. Labels
-    resolve lazily per local index, so a 1M-task wave never materializes
-    uid strings (or a 1M-element object array of backend names) for
-    slices the ``max_slices`` cap will drop."""
+def _slice_segments(tasks: Sequence, services: Sequence = ()) -> List[tuple]:
+    """Completed-task slices as ``(process, starts, ends, label_fn)``
+    segments — one per object-task backend plus one per cohort, plus one
+    per service (completed request spans). Labels resolve lazily per
+    local index, so a 1M-task wave never materializes uid strings (or a
+    1M-element object array of backend names) for slices the
+    ``max_slices`` cap will drop."""
     objs, cohorts = _split_cohorts(tasks)
     per_backend: Dict[str, List[List[Any]]] = {}
     for t in objs:
@@ -63,7 +69,40 @@ def _slice_segments(tasks: Sequence) -> List[tuple]:
             continue
         segments.append((c.backend or "-", np.asarray(c.run_t),
                          np.asarray(c.done_t), c.uid))
+    for svc in services:
+        log = svc.request_log()
+        submit = np.asarray(log["submit"], dtype=np.float64)
+        end = np.asarray(log["end"], dtype=np.float64)
+        if not len(submit):
+            continue
+        # completed requests only: pending / never-finished carry -1.0
+        rids = np.flatnonzero((submit >= 0.0) & (end >= 0.0))
+        if not len(rids):
+            continue
+        segments.append((f"service:{svc.name}", submit[rids], end[rids],
+                         lambda i, r=rids: f"req.{int(r[i])}"))
     return segments
+
+
+_INSTANT_NAMES = ("chaos:node_fail", "chaos:pilot_fail", "chaos:skip",
+                  "obs:alert")
+
+
+def _instant_events(profiler) -> List[Dict[str, Any]]:
+    """``"i"`` rows for chaos injections and streamed health alerts, with
+    scalar payload fields carried into ``args``."""
+    events: List[Dict[str, Any]] = []
+    for name in _INSTANT_NAMES:
+        if not profiler.has_name(name):
+            continue
+        for ev in profiler.iter_name(name):
+            args = {k: v for k, v in (ev.data or {}).items()
+                    if isinstance(v, (str, int, float, bool))}
+            events.append({"ph": "i", "name": name, "pid": 0, "tid": 0,
+                           "ts": int(round(ev.time * _US)), "s": "g",
+                           "cat": "fault" if name.startswith("chaos:")
+                           else "alert", "args": args})
+    return events
 
 
 def _pack_lanes(starts: np.ndarray, ends: np.ndarray) -> np.ndarray:
@@ -93,10 +132,11 @@ def _pack_lanes(starts: np.ndarray, ends: np.ndarray) -> np.ndarray:
 def chrome_trace(tasks: Sequence, profiler=None, total_cores: int = 0,
                  dt: float = 1.0, max_slices: int = 20000,
                  extra_counters: Optional[Dict[str, Series]] = None,
-                 ) -> Dict[str, Any]:
+                 services: Sequence = ()) -> Dict[str, Any]:
     """Build the trace-event dict (``json.dump``-ready). See module docs;
-    ``extra_counters`` adds caller-provided Series as counter tracks."""
-    segments = _slice_segments(tasks)
+    ``extra_counters`` adds caller-provided Series as counter tracks,
+    ``services`` adds request-span processes (same ``max_slices`` cap)."""
+    segments = _slice_segments(tasks, services)
     n_total = sum(len(s[1]) for s in segments)
     dropped = 0
     if n_total > max_slices:
@@ -129,8 +169,9 @@ def chrome_trace(tasks: Sequence, profiler=None, total_cores: int = 0,
     backends = sorted(gathered)
     pid_of = {b: i + 1 for i, b in enumerate(backends)}
     for b in backends:
+        pname = b if b.startswith("service:") else f"backend:{b}"
         events.append({"ph": "M", "name": "process_name", "pid": pid_of[b],
-                       "tid": 0, "args": {"name": f"backend:{b}"}})
+                       "tid": 0, "args": {"name": pname}})
     starts = np.empty(0)                  # run-wide, for the counter gate
     for b in backends:
         parts = gathered[b]
@@ -176,6 +217,13 @@ def chrome_trace(tasks: Sequence, profiler=None, total_cores: int = 0,
                            "ts": int(t_us[i]),
                            "args": {cname: float(series.v[i])}})
 
+    # instant markers: chaos injections + streamed health alerts
+    instants = _instant_events(profiler) if profiler is not None else []
+    if instants and not counters:
+        events.append({"ph": "M", "name": "process_name", "pid": 0,
+                       "tid": 0, "args": {"name": "gauges"}})
+    events.extend(instants)
+
     # global ts sort: viewers require non-decreasing ts within a track;
     # sorting the whole array (metadata first via ts absence -> -1)
     # guarantees it per track too
@@ -185,16 +233,18 @@ def chrome_trace(tasks: Sequence, profiler=None, total_cores: int = 0,
             "otherData": {"generator": "repro.observability",
                           "n_slices": int(n_total - dropped),
                           "n_slices_dropped": int(dropped),
-                          "n_counter_tracks": len(counters)}}
+                          "n_counter_tracks": len(counters),
+                          "n_instants": len(instants)}}
 
 
 def export_chrome_trace(path: str, tasks: Sequence, profiler=None,
                         total_cores: int = 0, dt: float = 1.0,
-                        max_slices: int = 20000) -> Dict[str, Any]:
+                        max_slices: int = 20000,
+                        services: Sequence = ()) -> Dict[str, Any]:
     """Write the Chrome trace JSON to ``path``; returns the ``otherData``
     summary (including the dropped-slice count — never capped silently)."""
     doc = chrome_trace(tasks, profiler, total_cores=total_cores, dt=dt,
-                       max_slices=max_slices)
+                       max_slices=max_slices, services=services)
     with open(path, "w") as fh:
         json.dump(doc, fh)
     return doc["otherData"]

@@ -47,6 +47,7 @@ class RunReport:
     sched: Optional[Dict[str, Any]] = None         # sched_metrics
     services: Dict[str, Any] = field(default_factory=dict)
     faults: Optional[Dict[str, Any]] = None        # fault_metrics
+    alerts: List[Dict[str, Any]] = field(default_factory=list)
     cost: Optional[Dict[str, Any]] = None          # observability's own cost
     extra: Dict[str, Any] = field(default_factory=dict)
     results: Optional[List[Dict[str, Any]]] = None
@@ -82,6 +83,13 @@ class RunReport:
         svc = {s.name: service_metrics(s).as_dict() for s in services}
         faults = (fault_metrics(profiler).as_dict()
                   if profiler is not None else None)
+        alerts: List[Dict[str, Any]] = []
+        if profiler is not None:
+            # streamed health alerts (obs:alert rows a Watcher recorded)
+            from repro.observability.stream import ALERT_EVENT
+            if profiler.has_name(ALERT_EVENT):
+                alerts = [{"t": round(ev.time, 6), **(ev.data or {})}
+                          for ev in profiler.iter_name(ALERT_EVENT)]
         n = max(1, m.n_tasks)
         cost: Dict[str, Any] = {
             "analysis_wall_s": round(time.perf_counter() - t0, 6)}
@@ -93,7 +101,7 @@ class RunReport:
                 trace_bytes_per_task=round(profiler.nbytes() / n, 1))
         return cls(metrics=m.as_dict(), breakdown=bd.as_dict(),
                    series=series, sched=sched, services=svc, faults=faults,
-                   cost=cost, extra=dict(extra or {}))
+                   alerts=alerts, cost=cost, extra=dict(extra or {}))
 
     # ----------------------------------------------------------- serialize
     def to_json(self) -> Dict[str, Any]:
@@ -111,6 +119,8 @@ class RunReport:
             out["series"] = self.series
         if self.services:
             out["services"] = self.services
+        if self.alerts:
+            out["alerts"] = self.alerts
         return out
 
     def save(self, path: str) -> None:
@@ -216,6 +226,12 @@ def render_payload(payload: Dict[str, Any]) -> str:
     if faults and any(v for v in faults.values() if not isinstance(v, dict)):
         lines.append("-- faults")
         lines.extend(_kv_lines(faults))
+    alerts = payload.get("alerts") or []
+    if alerts:
+        lines.append(f"-- alerts ({len(alerts)})")
+        for a in alerts:
+            lines.append(f"  [{a.get('rule', '?')}] t={a.get('t', 0.0):.1f}: "
+                         f"{a.get('message', '')}")
     cost = payload.get("cost")
     if cost:
         lines.append("-- observability cost")
@@ -239,7 +255,9 @@ def diff_payloads(base: Dict[str, Any], cand: Dict[str, Any],
                   tolerance: float = 0.10,
                   ) -> "tuple[List[str], List[str]]":
     """Compare two saved run payloads: per-phase mean deltas over the
-    lifecycle breakdown (hold/dispatch/queue/launch/exec) plus the
+    lifecycle breakdown (hold/dispatch/queue/launch/exec), per-group exec
+    means over the groups present in *both* runs (groups only one run has
+    are listed as added/removed, never compared), plus the
     throughput/makespan deltas from ``metrics``. Returns the rendered diff
     lines and the list of violations — a phase mean that grew, or a
     throughput that shrank, by more than ``tolerance`` (relative). The CLI
@@ -278,6 +296,32 @@ def diff_payloads(base: Dict[str, Any], cand: Dict[str, Any],
             if worse:
                 viols.append(f"phase {name} mean {a:.4g} -> {b:.4g} "
                              f"({d:+.1%} > {tolerance:.0%})")
+
+    # per-group comparison: only groups present in BOTH runs are compared
+    # (a run that added a backend should not "regress" against one that
+    # never had it) — membership changes are reported explicitly instead
+    bg = (base.get("breakdown") or {}).get("groups") or {}
+    cg = (cand.get("breakdown") or {}).get("groups") or {}
+    if bg or cg:
+        added = sorted(set(cg) - set(bg))
+        removed = sorted(set(bg) - set(cg))
+        for name in sorted(set(bg) & set(cg)):
+            a = (bg[name].get("phases") or {}).get("exec", {}).get("mean",
+                                                                   0.0)
+            b = (cg[name].get("phases") or {}).get("exec", {}).get("mean",
+                                                                   0.0)
+            d = rel(a, b)
+            worse = d > tolerance
+            mark = "  REGRESSION" if worse else ""
+            lines.append(f"  [{name}] exec mean{a:>12.4g}{b:>12.4g}"
+                         f"{d:>+9.1%}{mark}")
+            if worse:
+                viols.append(f"group {name} exec mean {a:.4g} -> {b:.4g} "
+                             f"({d:+.1%} > {tolerance:.0%})")
+        if added:
+            lines.append(f"  groups added:   {', '.join(added)}")
+        if removed:
+            lines.append(f"  groups removed: {', '.join(removed)}")
 
     bm = base.get("metrics") or {}
     cm = cand.get("metrics") or {}

@@ -8,11 +8,13 @@ throughput curve with one ``np.histogram`` call, and the step-function
 metrics (in-flight tasks, core occupancy, scheduler hold depth) are a
 single +1/-1 event sweep (sort + cumsum) sampled onto the grid.
 
-For real-engine runs whose interesting signals are *instantaneous* gauges
-(executor queue depth, free cores) rather than trace-derivable,
-:class:`LiveSampler` schedules a low-overhead periodic probe through the
-engine; it auto-stops once the agent drains so it can never hold a
-``SimEngine`` event loop open forever.
+All grids are snapped to the absolute ``dt`` lattice so the streaming
+aggregators in :mod:`repro.observability.stream` — which fold the same
+events incrementally, delta by delta — land on bit-identical bin edges
+and (for the integer-weighted counts and levels here) bit-identical
+values.  Live sampling of instantaneous gauges (executor queue depth,
+free cores) lives in :mod:`repro.observability.stream` too
+(:class:`~repro.observability.stream.LiveSampler`).
 """
 from __future__ import annotations
 
@@ -50,11 +52,17 @@ class Series:
 
 
 def _grid(t_lo: float, t_hi: float, dt: float) -> np.ndarray:
-    """Bin left edges covering ``[t_lo, t_hi]``, endpoint-inclusive (the
-    last edge is >= t_hi, so step series show the post-final-event level —
-    e.g. a hold queue that drained to zero ends at zero)."""
-    n = (int(np.ceil((t_hi - t_lo) / dt)) + 1) if t_hi > t_lo else 1
-    return t_lo + dt * np.arange(n, dtype=np.float64)
+    """Bin left edges covering ``[t_lo, t_hi]``, snapped to the absolute
+    ``dt`` lattice (edge ``i`` is exactly ``dt * k`` for integer ``k``).
+    Snapping makes the grid a pure function of (floor(t/dt), dt) rather
+    than of the first event's float timestamp, so a streaming aggregator
+    that has only seen a prefix of the events builds bit-identical edges
+    to a post-hoc pass over the full series.  The last edge is > t_hi,
+    so step series show the post-final-event level — e.g. a hold queue
+    that drained to zero ends at zero."""
+    k0 = int(np.floor(t_lo / dt))
+    k1 = int(np.floor(t_hi / dt)) + 1
+    return dt * np.arange(k0, k1 + 1, dtype=np.float64)
 
 
 def _step_series(name: str, starts: np.ndarray, ends: np.ndarray,
@@ -142,8 +150,14 @@ def throughput(profiler=None, tasks: Optional[Sequence] = None,
         done = np.empty(0)
     if not len(done):
         return Series("throughput", np.empty(0), np.empty(0), dt)
+    # integer floor-binning on the absolute dt lattice (not np.histogram,
+    # whose float edge comparisons can differ from floor(t/dt) at edges):
+    # bin membership is then exact and order-independent, so a streaming
+    # fold over arbitrary trace deltas reproduces these counts verbatim
+    k = np.floor(done / dt).astype(np.int64)
     grid = _grid(float(done.min()), float(done.max()), dt)
-    counts, _ = np.histogram(done, bins=np.append(grid, grid[-1] + dt))
+    k0 = int(np.floor(float(done.min()) / dt))
+    counts = np.bincount(k - k0, minlength=len(grid))
     return Series("throughput", grid, counts / dt, dt)
 
 
@@ -251,63 +265,3 @@ def timeseries(profiler=None, tasks: Optional[Sequence] = None,
             raise ValueError("service_queue_depth needs a service")
         return service_queue_depth(service, dt)
     raise KeyError(f"unknown metric {metric!r} (one of {METRICS})")
-
-
-# ---------------------------------------------------------------------------
-# live sampling (opt-in)
-# ---------------------------------------------------------------------------
-
-@dataclass
-class LiveSample:
-    t: float
-    n_unfinished: int
-    queue_depth: int
-    free_cores: int
-
-
-class LiveSampler:
-    """Periodic gauge probe for signals the trace cannot reconstruct
-    (instantaneous executor queue depth / free cores on the real engine).
-
-    Opt-in and deliberately minimal: one scheduled callback per interval
-    reading three O(#backends) counters. The sampler re-arms itself only
-    while the agent still has unfinished work — on a ``SimEngine`` a
-    self-rescheduling event would otherwise keep the virtual clock alive
-    forever — and ``stop()`` halts it explicitly."""
-
-    def __init__(self, agent, interval: float = 1.0):
-        self.agent = agent
-        self.interval = interval
-        self.samples: List[LiveSample] = []
-        self._armed = False
-        self._stopped = False
-
-    def start(self) -> "LiveSampler":
-        if not self._armed:
-            self._armed = True
-            self._stopped = False
-            self.agent.engine.schedule(self.interval, self._tick)
-        return self
-
-    def stop(self) -> None:
-        self._stopped = True
-        self._armed = False
-
-    def _tick(self) -> None:
-        if self._stopped:
-            return
-        agent = self.agent
-        self.samples.append(LiveSample(
-            agent.engine.now(), agent.n_unfinished,
-            agent.backend_depth, agent.free_cores))
-        if agent.n_unfinished > 0:
-            agent.engine.schedule(self.interval, self._tick)
-        else:
-            self._armed = False
-
-    def series(self, field_name: str = "n_unfinished") -> Series:
-        """The sampled gauge as a Series (``t`` = sample times)."""
-        t = np.asarray([s.t for s in self.samples])
-        v = np.asarray([getattr(s, field_name) for s in self.samples],
-                       dtype=np.float64)
-        return Series(f"live:{field_name}", t, v, self.interval)

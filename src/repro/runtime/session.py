@@ -270,6 +270,19 @@ class TaskManager:
         self.submit_tasks(svc.descriptions())
         return svc
 
+    def watch(self, interval: float = 1.0, **watcher_kw):
+        """Attach streaming telemetry to the bound pilot's run: returns a
+        started :class:`repro.observability.stream.Watcher` whose engine
+        callback folds the trace every ``interval`` (virtual seconds on a
+        sim session, wall seconds on a real one). Keyword args pass
+        through — ``rules=``, ``services=``, ``emit=``, ``promfile=``,
+        ``on_tick=``, ``dt=``. Works on both engines; the watcher
+        auto-finalizes when the agent drains."""
+        # deferred import: observability is an optional consumer layer
+        from repro.observability.stream import Watcher
+
+        return Watcher(self.agent, interval=interval, **watcher_kw).start()
+
     def submit_functions(self, fn, argslist, **td_kw) -> List[Task]:
         """Submit one function task per element of ``argslist`` (each element
         becomes the positional args; non-tuples are wrapped). With a

@@ -256,6 +256,10 @@ class Service:
         self._durations: List[Optional[float]] = []
         self.results: List[Any] = []
         self._n_done = 0
+        # completion journal: rids in completion order — a streaming reader
+        # (observability watch / ServiceLatencyRule) tails this in O(new)
+        # via completed_since() instead of rescanning the whole log
+        self._done_journal = array("q")
 
         agent.add_done_callback(self._replica_terminal)
 
@@ -728,6 +732,7 @@ class Service:
         self._end_ts[rid] = self.engine.now()
         self._ok[rid] = _OK
         self._n_done += 1
+        self._done_journal.append(rid)
         r.outstanding -= 1
         r.served += 1
         self._maybe_scale()
@@ -748,6 +753,7 @@ class Service:
         self._ok[rid] = _FAILED
         self.results[rid] = reason
         self._n_done += 1
+        self._done_journal.append(rid)
 
     # real request execution (called by the replica's worker thread) ----
     def _request_start(self, rid: int):
@@ -757,6 +763,7 @@ class Service:
         self._end_ts[rid] = self.engine.now()
         self._ok[rid] = _OK if ok else _FAILED
         self._n_done += 1
+        self._done_journal.append(rid)
         self.results[rid] = result
         r.outstanding -= 1
         r.served += 1
@@ -946,6 +953,16 @@ class Service:
         return {"submit": self._submit_ts, "start": self._start_ts,
                 "end": self._end_ts, "ok": self._ok,
                 "retries": self._retries}
+
+    def completed_since(self, pos: int):
+        """``(rids, new_pos)``: request ids completed (ok or failed) since
+        journal position ``pos``, in completion order — the O(new) cursor
+        streaming consumers poll (e.g. the observability layer's rolling
+        service-p99 health rule)."""
+        hi = len(self._done_journal)
+        if pos >= hi:
+            return [], hi
+        return list(self._done_journal[pos:hi]), hi
 
     def served_per_replica(self) -> Dict[str, int]:
         return {uid: r.served for uid, r in self._replicas.items()}

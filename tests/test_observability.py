@@ -316,10 +316,12 @@ def _validate_chrome(doc):
     assert set(doc) >= {"traceEvents", "otherData"}
     tracks = {}
     for e in doc["traceEvents"]:
-        assert e["ph"] in ("X", "M", "C")
+        assert e["ph"] in ("X", "M", "C", "i")
         assert {"pid", "tid", "name"} <= set(e)
         if e["ph"] == "X":
             assert e["dur"] >= 1 and e["ts"] >= 0
+        if e["ph"] == "i":
+            assert e["s"] == "g" and e["ts"] >= 0
         if "ts" in e:
             key = (e["pid"], e["tid"], e["ph"])
             assert e["ts"] >= tracks.get(key, -1), f"ts regress on {key}"
